@@ -1,0 +1,38 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every module reproduces one paper artifact and returns a list of CSV rows
+``(name, value, derived)``; ``benchmarks.run`` orchestrates and prints.
+All simulations run the same packet-level engine as the tests.
+"""
+from __future__ import annotations
+
+from repro.core import fattree
+from repro.core.baselines import (BinaryTreeBcast, MultiUnicastBcast,
+                                  RingBcast)
+from repro.core.gleam import GleamNetwork
+
+
+def gleam_bcast_jct(members, nbytes, *, topo=None, timeout=30.0, **net_kw):
+    net = GleamNetwork(topo or fattree.testbed(n_hosts=len(members)),
+                       **net_kw)
+    g = net.multicast_group(members)
+    g.register()
+    rec = g.bcast(nbytes)
+    return g.run_until_delivered(rec, timeout=timeout), net, g
+
+
+def baseline_bcast_jct(cls, members, nbytes, *, topo=None, chunks=8,
+                       timeout=30.0, **net_kw):
+    net = GleamNetwork(topo or fattree.testbed(n_hosts=len(members)),
+                       **net_kw)
+    b = cls(net, members, chunks=chunks) if cls is not MultiUnicastBcast \
+        else cls(net, members)
+    b.start(nbytes)
+    return b.run(timeout=timeout), net, b
+
+
+BASELINES = {
+    "multiunicast": MultiUnicastBcast,
+    "ring": RingBcast,
+    "bintree": BinaryTreeBcast,
+}

@@ -1,0 +1,46 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (value is us/ms/IOPS as named).
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run fig09 fig14  # a subset
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig09_mpi_bcast",       # Fig. 9  MPI_Bcast JCT vs message size
+    "fig10_11_hpl",          # Figs. 10-11 HPL PB/RS JCT
+    "fig12_13_storage",      # Figs. 12-13 replication IOPS + IO latency
+    "fig14_scale",           # Fig. 14 large-scale fat-tree JCT (fluid)
+    "fig15_16_loss",         # Figs. 15-16 loss tolerance / goodput
+    "collective_schedules",  # adapted layer: ICI schedule comparison
+]
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    wanted = [m for m in MODULES
+              if not argv or any(a in m for a in argv)]
+    rows: list = []
+    print("name,value,derived")
+    for name in wanted:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        before = len(rows)
+        try:
+            mod.run(rows)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            rows.append((f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}"))
+        for n, v, d in rows[before:]:
+            print(f"{n},{v:.3f},{d}")
+        print(f"# {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Serving driver: continuous-batching server over a smoke-size model.
+
+Submits a Poisson-ish trickle of requests with ragged prompt lengths and
+drains them through the shared decode pool, printing throughput and the
+batching efficiency (steps used vs sequential lower bound).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --requests 12 --pool 4
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.launch.mesh import single_device_mesh
+from repro.models.blocks import init_params
+from repro.models.model import model_defs
+from repro.runtime.serve import Server
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="granite_3_2b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--pool", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    mesh = single_device_mesh()
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    srv = Server(cfg, params, mesh, pool=args.pool, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    total_prompt = 0
+    for i in range(args.requests):
+        plen = int(rng.integers(2, 24))
+        total_prompt += plen
+        prompt = rng.integers(0, cfg.vocab_size, size=plen)
+        reqs.append(srv.submit(prompt, max_new_tokens=args.max_new))
+
+    t0 = time.time()
+    stats = srv.run_until_drained()
+    dt = time.time() - t0
+
+    seq_lower = total_prompt + args.requests * args.max_new
+    print(f"[serve_lm] {stats.completed}/{args.requests} requests done; "
+          f"{stats.tokens_generated} tokens in {dt:.1f}s "
+          f"({stats.tokens_generated / dt:.1f} tok/s)")
+    print(f"[serve_lm] pool steps {stats.steps} vs sequential lower "
+          f"bound {seq_lower} -> batching gain "
+          f"{seq_lower / stats.steps:.2f}x")
+    sample = reqs[0]
+    print(f"[serve_lm] request 0 continuation: {sample.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

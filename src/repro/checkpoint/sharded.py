@@ -1,0 +1,138 @@
+"""Sharded checkpointing: manifest + per-leaf npz shards, async writes,
+keep-k retention, and elastic restore onto a DIFFERENT mesh.
+
+Layout on disk (one directory per step):
+
+    ckpt_dir/step_000123/
+        MANIFEST.json        # tree structure, shapes, dtypes, step, meta
+        leaf_00000.npy ...   # one file per pytree leaf (full logical value)
+        COMMITTED            # written last: crash-consistent marker
+
+Leaves are written as full logical arrays (gathered from the mesh), which
+is what makes restore onto any other mesh (elastic re-registration,
+DESIGN.md §2.4) trivial: load, then device_put with the NEW sharding.
+On a real multi-host pod the gather is a per-host all-gather via
+jax.device_get of addressable shards; the API is identical.
+
+The Gleam mapping: a checkpoint-restore onto a new mesh is exactly the
+control-plane re-registration of Appendix A — the data plane (training
+step) is untouched; only the forwarding tables (shardings) are rebuilt.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import pathlib
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree, prefix=""):
+    """Stable depth-first leaf ordering with path strings."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pool = cf.ThreadPoolExecutor(max_workers=1) \
+            if async_write else None
+        self._pending: cf.Future | None = None
+
+    # ----------------------------------------------------------- write
+
+    def save(self, step: int, tree, *, meta: dict | None = None) -> None:
+        """Snapshot `tree` at `step`.  With async_write the device->host
+        transfer happens now, the disk write in the background (the train
+        loop keeps stepping — compute/IO overlap)."""
+        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        if self._pool is None:
+            self._write(step, host_tree, meta or {})
+            return
+        self.wait()
+        self._pending = self._pool.submit(self._write, step, host_tree,
+                                          meta or {})
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, host_tree, meta: dict) -> None:
+        d = self.dir / f"step_{step:09d}"
+        tmp = self.dir / f".tmp_step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        leaves, treedef = jax.tree.flatten(host_tree)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                       for l in leaves],
+            "meta": meta,
+        }
+        for i, leaf in enumerate(leaves):
+            np.save(tmp / f"leaf_{i:05d}.npy", leaf)
+        (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+        (tmp / "COMMITTED").write_text("ok")
+        if d.exists():
+            shutil.rmtree(d)
+        tmp.rename(d)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ----------------------------------------------------------- read
+
+    def all_steps(self):
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if (p / "COMMITTED").exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, example_tree, *, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of `example_tree`.
+
+        shardings: matching pytree of NamedShardings for the TARGET mesh
+        (elastic restore: the saved mesh is irrelevant — full logical
+        leaves are resharded on load).  Returns (tree, step, meta).
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "MANIFEST.json").read_text())
+        leaves, treedef = jax.tree.flatten(example_tree)
+        assert manifest["n_leaves"] == len(leaves), (
+            f"checkpoint has {manifest['n_leaves']} leaves, "
+            f"model expects {len(leaves)}")
+        loaded = []
+        for i, ex in enumerate(leaves):
+            arr = np.load(d / f"leaf_{i:05d}.npy")
+            want = tuple(ex.shape)
+            assert tuple(arr.shape) == want, (
+                f"leaf {i}: checkpoint {arr.shape} != model {want}")
+            loaded.append(arr)
+        tree = jax.tree.unflatten(treedef, loaded)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, step, manifest["meta"]

@@ -1,0 +1,150 @@
+"""Application-layer multicast baselines (§2.3, Fig. 2a/2b).
+
+All baselines run over plain RC unicast QPs in the same packet simulator,
+so comparisons against Gleam share every modeling assumption:
+
+- ``MultiUnicastBcast`` — the sender transmits identical data over one RC
+  connection per receiver (Fig. 2a): sender-link bottleneck.
+- ``RingBcast``         — overlay pipeline (the HPL *increasing-ring*):
+  the message is split into chunks; receiver i relays each chunk to i+1
+  after a host forwarding overhead (RX stack -> CPU -> TX stack, §2.3).
+- ``BinaryTreeBcast``   — overlay binomial/binary tree relay, the
+  double-binary-tree family's single-tree member.
+
+Each returns per-receiver delivery times so JCT is measured exactly like
+the Gleam path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import packet as pk
+from repro.core.gleam import GleamNetwork
+
+RELAY_OVERHEAD = 1.5e-6       # host store-and-forward cost per message
+
+
+class _Bcast:
+    def __init__(self, net: GleamNetwork, members: Sequence[str]):
+        self.net = net
+        self.members = list(members)
+        self.source = self.members[0]
+        self.t_deliver: Dict[str, float] = {}
+        self.t_start = 0.0
+
+    def n_receivers(self) -> int:
+        return len(self.members) - 1
+
+    def jct(self) -> float:
+        if len(self.t_deliver) < self.n_receivers():
+            return float("inf")
+        return max(self.t_deliver.values()) - self.t_start
+
+    def run(self, timeout: float = 10.0) -> float:
+        sim = self.net.sim
+        deadline = sim.now + timeout
+        while len(self.t_deliver) < self.n_receivers():
+            before = sim.events
+            sim.run(until=deadline)
+            if sim.events == before or sim.now >= deadline:
+                break
+        return self.jct()
+
+
+class MultiUnicastBcast(_Bcast):
+    """Fig. 2a: n-1 serialized copies through the sender's link."""
+
+    def __init__(self, net: GleamNetwork, members: Sequence[str], **qp_kw):
+        super().__init__(net, members)
+        self.qps = []
+        for r in self.members[1:]:
+            qa, qb = net.unicast_qp(self.source, r, **qp_kw)
+            qb.on_deliver = self._mk_deliver(r)
+            self.qps.append((qa, qb))
+
+    def _mk_deliver(self, member):
+        def fn(msg_id, now):
+            self.t_deliver[member] = now
+        return fn
+
+    def start(self, nbytes: int) -> None:
+        sim = self.net.sim
+        self.t_start = sim.now
+        for qa, _ in self.qps:
+            qa.submit(nbytes, sim.now)
+        sim.kick(sim.hosts[self.source], sim.now)
+
+
+class _RelayBcast(_Bcast):
+    """Common machinery for overlay relays: edges (parent -> child), each
+    chunk is re-submitted downstream `RELAY_OVERHEAD` after delivery."""
+
+    def __init__(self, net: GleamNetwork, members: Sequence[str],
+                 chunks: int = 8, relay_overhead: float = RELAY_OVERHEAD,
+                 **qp_kw):
+        super().__init__(net, members)
+        self.chunks = max(1, chunks)
+        self.relay_overhead = relay_overhead
+        self.edges = self._edges()                     # (parent, child)
+        self.children: Dict[str, List[str]] = {}
+        for a, b in self.edges:
+            self.children.setdefault(a, []).append(b)
+        self.qp_out: Dict[tuple, object] = {}
+        self.n_chunks_done: Dict[str, int] = {}
+        for a, b in self.edges:
+            qa, qb = net.unicast_qp(a, b, **qp_kw)
+            self.qp_out[(a, b)] = qa
+            qb.on_deliver = self._mk_deliver(b)
+        self.chunk_bytes = 0
+
+    def _edges(self) -> List[tuple]:
+        raise NotImplementedError
+
+    def _mk_deliver(self, member: str):
+        def fn(msg_id, now):
+            self.n_chunks_done[member] = self.n_chunks_done.get(member, 0) + 1
+            if self.n_chunks_done[member] == self.chunks:
+                self.t_deliver[member] = now
+            # relay this chunk downstream after the host forwarding cost
+            for c in self.children.get(member, ()):
+                qp = self.qp_out[(member, c)]
+                sim = self.net.sim
+                t = now + self.relay_overhead
+                sim.schedule(t, lambda tt, q=qp, n=self.chunk_bytes, m=msg_id:
+                             self._relay(q, member, n, m, tt))
+        return fn
+
+    def _relay(self, qp, member, nbytes, msg_id, now):
+        qp.submit(nbytes, now, msg_id=msg_id)
+        self.net.sim.kick(self.net.sim.hosts[member], now)
+
+    def start(self, nbytes: int) -> None:
+        sim = self.net.sim
+        self.t_start = sim.now
+        self.chunk_bytes = max(1, math.ceil(nbytes / self.chunks))
+        for c in self.children.get(self.source, ()):
+            qp = self.qp_out[(self.source, c)]
+            for k in range(self.chunks):
+                qp.submit(self.chunk_bytes, sim.now, msg_id=k)
+        sim.kick(sim.hosts[self.source], sim.now)
+
+
+class RingBcast(_RelayBcast):
+    """Overlay pipeline ring: 0 -> 1 -> 2 -> ... -> n-1."""
+
+    def _edges(self):
+        return [(self.members[i], self.members[i + 1])
+                for i in range(len(self.members) - 1)]
+
+
+class BinaryTreeBcast(_RelayBcast):
+    """Overlay binary tree: member i relays to 2i+1, 2i+2."""
+
+    def _edges(self):
+        out = []
+        for i, m in enumerate(self.members):
+            for c in (2 * i + 1, 2 * i + 2):
+                if c < len(self.members):
+                    out.append((m, self.members[c]))
+        return out

@@ -1,0 +1,254 @@
+"""RC endpoint logic — the unmodified 'commodity RNIC' transport that Gleam
+re-purposes (§2.1, §3.1).
+
+One ``QP`` object carries both directions of a reliable connection:
+
+- sender side: message queue, go-back-N window, cumulative-ACK
+  interpretation, NACK-triggered rollback, retransmission timeout, and a
+  DCQCN-style rate machine driven by CNPs (§3.5 reuses it untouched);
+- receiver side: strict-in-order rqPSN verification (out-of-order packets
+  are dropped and NACKed once per gap — RoCE semantics), ACK coalescing
+  (every ``ack_freq`` packets, and always on message boundaries), WRITE
+  RETH (va/rkey) validation against registered MRs, ECN-echo CNPs.
+
+The endpoint never learns it is multicasting: it sees a single virtual
+peer (GroupIP / virtual QPN) and a unicast-like feedback stream — that is
+the paper's core compatibility claim, and the property tests assert it.
+
+Appendix B source switching = ``sync_psn_for_source_switch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import packet as pk
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class Message:
+    msg_id: int
+    nbytes: int
+    op: str                      # send | write | mr_update
+    base_psn: int
+    n_pkts: int
+    va: int = 0
+    rkey: int = 0
+    payload: object = None
+    t_submit: float = 0.0
+    t_complete: float = -1.0     # sender-side: cumulative ACK covers last PSN
+
+
+@dataclasses.dataclass
+class RateState:
+    """DCQCN-lite: multiplicative cut on CNP, additive recovery."""
+    rate: float
+    peak: float
+    min_rate: float = 1e9 / 8
+    alpha: float = 1.0
+    g: float = 1.0 / 16
+    inc: float = 5e9 / 8          # bytes/s per recovery period
+    period: float = 55e-6
+    last_cnp: float = -INF
+    last_inc: float = 0.0
+
+    def on_cnp(self, now: float):
+        self.alpha = (1 - self.g) * self.alpha + self.g
+        self.rate = max(self.min_rate, self.rate * (1 - self.alpha / 2))
+        self.last_cnp = now
+
+    def maybe_increase(self, now: float):
+        if now - self.last_cnp < self.period:
+            return
+        while self.last_inc + self.period <= now:
+            self.last_inc += self.period
+            self.alpha *= (1 - self.g)
+            self.rate = min(self.peak, self.rate + self.inc)
+
+
+class QP:
+    def __init__(self, qpn: int, ip: int, dst_ip: int, dst_qpn: int, *,
+                 link_bw: float, window: int = 256, mtu: int = pk.MTU,
+                 ack_freq: int = 4, rto: float = 200e-6,
+                 on_complete: Optional[Callable] = None,
+                 on_deliver: Optional[Callable] = None):
+        self.qpn = qpn
+        self.ip = ip
+        self.dst_ip = dst_ip
+        self.dst_qpn = dst_qpn
+        self.mtu = mtu
+        self.window = window
+        self.ack_freq = ack_freq
+        self.rto = rto
+        self.on_complete = on_complete      # (msg, now) sender CQE
+        self.on_deliver = on_deliver        # (msg_id, now) receiver done
+        # ---- sender state
+        self.sq_psn = 0                     # next fresh PSN to assign
+        self.snd_una = 0                    # oldest unacked PSN
+        self.snd_nxt = 0                    # next PSN to (re)transmit
+        self.msgs: List[Message] = []
+        self._done_msgs = 0
+        self.rate = RateState(rate=link_bw, peak=link_bw)
+        self.next_emit_t = 0.0              # rate-pacing gate
+        self.timer_deadline = INF
+        self.retransmitted = 0
+        # ---- receiver state
+        self.rq_psn = 0                     # expected PSN
+        self.unacked_in = 0                 # coalescing counter
+        self.nack_outstanding = False
+        self.mrs: Dict[int, Tuple[int, int]] = {}   # rkey -> (va, len)
+        self.mr_violations = 0
+        self.delivered_bytes = 0
+        self.last_cnp_t = -INF
+        self.cnp_interval = 50e-6
+        self.deliveries: List[Tuple[int, float]] = []
+
+    # ------------------------------------------------------------- sender
+
+    def submit(self, nbytes: int, now: float, *, op: str = "send",
+               va: int = 0, rkey: int = 0, payload=None,
+               msg_id: Optional[int] = None) -> Message:
+        n_pkts = max(1, math.ceil(nbytes / self.mtu))
+        m = Message(msg_id if msg_id is not None else len(self.msgs),
+                    nbytes, op, self.sq_psn, n_pkts, va, rkey, payload, now)
+        self.msgs.append(m)
+        self.sq_psn = pk.psn_add(self.sq_psn, n_pkts)
+        return m
+
+    def _locate(self, psn: int) -> Optional[Message]:
+        # messages are contiguous in PSN space; scan from the tail cache
+        for m in reversed(self.msgs):
+            off = pk.psn_sub(psn, m.base_psn)
+            if off < m.n_pkts:
+                return m
+        return None
+
+    def has_pending(self) -> bool:
+        return pk.psn_gt(self.sq_psn, self.snd_nxt) or \
+            self.snd_nxt != self.sq_psn
+
+    def outstanding(self) -> int:
+        return pk.psn_sub(self.snd_nxt, self.snd_una)
+
+    def next_packet(self, now: float) -> Tuple[Optional[pk.Packet], float]:
+        """The NIC asks for the next data packet.  Returns (packet or None,
+        earliest time anything could become ready)."""
+        self.rate.maybe_increase(now)
+        if self.snd_nxt == self.sq_psn:
+            return None, INF                       # nothing to (re)send
+        if self.outstanding() >= self.window:
+            return None, INF                       # window closed: ACK-clocked
+        if now < self.next_emit_t:
+            return None, self.next_emit_t          # rate-paced
+        psn = self.snd_nxt
+        m = self._locate(psn)
+        off = pk.psn_sub(psn, m.base_psn)
+        nbytes = min(self.mtu, m.nbytes - off * self.mtu) if m.nbytes else 0
+        nbytes = max(nbytes, 1)
+        p = pk.data_packet(self.ip, self.dst_ip, self.dst_qpn, psn, nbytes,
+                           op=m.op, va=m.va, rkey=m.rkey, msg_id=m.msg_id,
+                           last=(off == m.n_pkts - 1), src_qpn=self.qpn)
+        if m.op == "mr_update":
+            p.payload = m.payload
+        self.snd_nxt = pk.psn_add(self.snd_nxt, 1)
+        self.next_emit_t = now + p.size / self.rate.rate
+        if self.timer_deadline == INF:
+            self.timer_deadline = now + self.rto
+        return p, self.next_emit_t
+
+    def on_ack(self, psn: int, now: float) -> None:
+        """Cumulative ACK: everything <= psn is delivered everywhere."""
+        una = pk.psn_add(psn, 1)
+        if not pk.psn_gt(una, self.snd_una):
+            return
+        self.snd_una = una
+        if pk.psn_gt(self.snd_una, self.snd_nxt):
+            self.snd_nxt = self.snd_una     # ACK beyond snd_nxt (stale rtx)
+        self.timer_deadline = (INF if self.snd_una == self.sq_psn
+                               else now + self.rto)
+        # complete messages whose last PSN is covered
+        while self._done_msgs < len(self.msgs):
+            m = self.msgs[self._done_msgs]
+            end = pk.psn_add(m.base_psn, m.n_pkts - 1)
+            if not pk.psn_gt(una, end):
+                break
+            m.t_complete = now
+            self._done_msgs += 1
+            if self.on_complete:
+                self.on_complete(m, now)
+
+    def on_nack(self, epsn: int, now: float) -> None:
+        """Go-back-N: everything < ePSN is acked; retransmit from ePSN."""
+        self.on_ack(pk.psn_sub(epsn, 1), now)
+        if pk.psn_gt(self.snd_nxt, epsn):
+            self.retransmitted += pk.psn_sub(self.snd_nxt, epsn)
+            self.snd_nxt = epsn
+        self.timer_deadline = now + self.rto
+
+    def on_cnp(self, now: float) -> None:
+        self.rate.on_cnp(now)
+
+    def on_timeout(self, now: float) -> None:
+        if self.snd_una == self.sq_psn:
+            self.timer_deadline = INF
+            return
+        self.retransmitted += pk.psn_sub(self.snd_nxt, self.snd_una)
+        self.snd_nxt = self.snd_una
+        self.timer_deadline = now + self.rto
+
+    # ----------------------------------------------------------- receiver
+
+    def register_mr(self, rkey: int, va: int, length: int) -> None:
+        self.mrs[rkey] = (va, length)
+
+    def on_data(self, p: pk.Packet, now: float) -> List[pk.Packet]:
+        """RoCE receive logic; returns feedback packets to emit."""
+        out: List[pk.Packet] = []
+        if p.ecn and now - self.last_cnp_t >= self.cnp_interval:
+            self.last_cnp_t = now
+            out.append(pk.cnp_packet(self.ip, p.src_ip, dst_qpn=p.src_qpn))
+        if p.psn == self.rq_psn:
+            if p.op == "write" and p.psn == 0 or p.op == "write":
+                # RETH check on WRITE packets (first of request carries it;
+                # our per-packet va/rkey keeps the model simple)
+                if p.rkey and p.rkey not in self.mrs:
+                    self.mr_violations += 1
+                    return out          # silently dropped (§3.3)
+            self.rq_psn = pk.psn_add(self.rq_psn, 1)
+            self.nack_outstanding = False
+            self.delivered_bytes += max(p.size - pk.HDR, 0)
+            self.unacked_in += 1
+            if p.last and self.on_deliver:
+                self.deliveries.append((p.msg_id, now))
+                self.on_deliver(p.msg_id, now)
+            if p.last or self.unacked_in >= self.ack_freq:
+                self.unacked_in = 0
+                out.append(pk.ack_packet(self.ip, p.src_ip,
+                                         pk.psn_sub(self.rq_psn, 1),
+                                         dst_qpn=p.src_qpn))
+        elif pk.psn_gt(self.rq_psn, p.psn):
+            # duplicate (sender went back further than our loss): re-ACK
+            out.append(pk.ack_packet(self.ip, p.src_ip,
+                                     pk.psn_sub(self.rq_psn, 1),
+                                     dst_qpn=p.src_qpn))
+        else:
+            # gap: NACK once per go-back-N round
+            if not self.nack_outstanding:
+                self.nack_outstanding = True
+                out.append(pk.nack_packet(self.ip, p.src_ip, self.rq_psn,
+                                          dst_qpn=p.src_qpn))
+        return out
+
+    # --------------------------------------------------------- Appendix B
+
+    def sync_psn_for_source_switch(self, becoming_source: bool) -> None:
+        """Old source: rqPSN <- sqPSN.  New source: sqPSN <- rqPSN."""
+        if becoming_source:
+            self.sq_psn = self.rq_psn
+            self.snd_una = self.rq_psn
+            self.snd_nxt = self.rq_psn
+        else:
+            self.rq_psn = self.sq_psn

@@ -1,0 +1,207 @@
+"""Datacenter topologies for the faithful Gleam layer.
+
+``Topology`` is a port-numbered multigraph with per-directed-link bandwidth
+and propagation delay, plus shortest-path routing helpers:
+
+- ``next_hop_ports(node, dst, flow_key)`` — the deterministic ECMP choice
+  used by unicast forwarding;
+- ``candidate_ports(node, dst)`` — the full equal-cost port set ("the set
+  of accessible ports", Algorithm 4 line 14) used by the registration
+  protocol's group-level load balancing.
+
+Builders:
+- ``testbed()``       — the paper's prototype (Fig. 8): one switch, four
+  100Gbps hosts (the FPGA board is folded into the switch model: the
+  Gleam logic runs "in" the switch, exactly the deployment the ACL
+  redirect emulates).
+- ``fig4()``          — the 3-layer example of Fig. 4 (4 leaves, 3 spines /
+  2 pods, 2 cores) for unit tests of multi-hop trees.
+- ``fat_tree(...)``   — parametric 3-layer pod/core fat-tree with 1:1
+  oversubscription for the large-scale simulations (§5.3: 16384 hosts,
+  64-port switches, 200Gbps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    bw: float       # bytes / second
+    delay: float    # seconds (propagation + fixed switch latency)
+
+
+class Topology:
+    def __init__(self):
+        self.ports: Dict[str, Dict[int, Tuple[str, int]]] = {}
+        self.links: Dict[Tuple[str, int], Link] = {}   # (node, port) -> Link
+        self.hosts: List[str] = []
+        self.switches: List[str] = []
+        self._dist: Dict[str, Dict[str, int]] = {}
+
+    # ------------------------------------------------------------ building
+
+    def add_host(self, name: str):
+        self.hosts.append(name)
+        self.ports[name] = {}
+
+    def add_switch(self, name: str):
+        self.switches.append(name)
+        self.ports[name] = {}
+
+    def connect(self, a: str, b: str, bw: float, delay: float):
+        pa = len(self.ports[a])
+        pb = len(self.ports[b])
+        self.ports[a][pa] = (b, pb)
+        self.ports[b][pb] = (a, pa)
+        self.links[(a, pa)] = Link(bw, delay)
+        self.links[(b, pb)] = Link(bw, delay)
+        self._dist.clear()
+
+    # ------------------------------------------------------------ routing
+
+    def _bfs(self, dst: str) -> Dict[str, int]:
+        dist = {dst: 0}
+        frontier = [dst]
+        while frontier:
+            nxt = []
+            for n in frontier:
+                for p, (peer, _) in self.ports[n].items():
+                    if peer not in dist:
+                        dist[peer] = dist[n] + 1
+                        nxt.append(peer)
+            frontier = nxt
+        return dist
+
+    def dist(self, node: str, dst: str) -> int:
+        if dst not in self._dist:
+            self._dist[dst] = self._bfs(dst)
+        return self._dist[dst][node]
+
+    def candidate_ports(self, node: str, dst: str) -> List[int]:
+        """All ports on shortest paths node -> dst (the ECMP set)."""
+        if node == dst:
+            return []
+        d = self.dist(node, dst)
+        return [p for p, (peer, _) in sorted(self.ports[node].items())
+                if self.dist(peer, dst) == d - 1]
+
+    def next_hop_port(self, node: str, dst: str, flow_key: int = 0) -> int:
+        cands = self.candidate_ports(node, dst)
+        return cands[flow_key % len(cands)]
+
+    def path(self, src: str, dst: str, flow_key: int = 0) -> List[str]:
+        node, out = src, [src]
+        while node != dst:
+            p = self.next_hop_port(node, dst, flow_key)
+            node = self.ports[node][p][0]
+            out.append(node)
+        return out
+
+    def path_links(self, src: str, dst: str,
+                   flow_key: int = 0) -> List[Tuple[str, int]]:
+        """Directed (node, port) hops along the unicast path."""
+        node, out = src, []
+        while node != dst:
+            p = self.next_hop_port(node, dst, flow_key)
+            out.append((node, p))
+            node = self.ports[node][p][0]
+        return out
+
+    def link(self, node: str, port: int) -> Link:
+        return self.links[(node, port)]
+
+    def peer(self, node: str, port: int) -> Tuple[str, int]:
+        return self.ports[node][port]
+
+
+# ---------------------------------------------------------------- builders
+
+GBPS = 1e9 / 8.0   # bytes/s per Gbit/s
+
+
+def testbed(n_hosts: int = 4, bw: float = 100 * GBPS,
+            delay: float = 0.6e-6) -> Topology:
+    """Fig. 8: commodity switch + FPGA Gleam logic + 4 servers @100G."""
+    t = Topology()
+    t.add_switch("SW0")
+    for i in range(n_hosts):
+        h = f"h{i}"
+        t.add_host(h)
+        t.connect(h, "SW0", bw, delay)
+    return t
+
+
+def fig4(bw: float = 100 * GBPS, delay: float = 0.6e-6) -> Topology:
+    """The 3-layer example topology of Fig. 4.
+
+    Hosts: S=h0 (under L1), R1=h1 (L2), R2=h2 (L3), R3=h3 (L4).
+    Pods: (L1,L2)+(S1,S2); (L3,L4)+(S3,S4).  Cores: C1, C2.
+    """
+    t = Topology()
+    for c in ("C1", "C2"):
+        t.add_switch(c)
+    for s in ("S1", "S2", "S3", "S4"):
+        t.add_switch(s)
+    for l in ("L1", "L2", "L3", "L4"):
+        t.add_switch(l)
+    for i in range(4):
+        t.add_host(f"h{i}")
+    # hosts to leaves
+    for i, l in enumerate(("L1", "L2", "L3", "L4")):
+        t.connect(f"h{i}", l, bw, delay)
+    # pod 0: L1, L2 <-> S1, S2 ; pod 1: L3, L4 <-> S3, S4
+    for l in ("L1", "L2"):
+        for s in ("S1", "S2"):
+            t.connect(l, s, bw, delay)
+    for l in ("L3", "L4"):
+        for s in ("S3", "S4"):
+            t.connect(l, s, bw, delay)
+    # cores: C1 on (S1,S3), C2 on (S2,S4) -- two spine planes
+    t.connect("S1", "C1", bw, delay)
+    t.connect("S3", "C1", bw, delay)
+    t.connect("S2", "C2", bw, delay)
+    t.connect("S4", "C2", bw, delay)
+    return t
+
+
+def fat_tree(n_pods: int = 4, leaves_per_pod: int = 2,
+             hosts_per_leaf: int = 4, aggs_per_pod: int = 2,
+             bw: float = 200 * GBPS, delay: float = 0.6e-6) -> Topology:
+    """Parametric 3-layer fat-tree, 1:1 oversubscription.
+
+    Each leaf connects to every agg in its pod; agg plane j (one agg per
+    pod) connects to a dedicated core group sized to keep capacity 1:1.
+    Uplink bandwidths are scaled so ingress == egress capacity at every
+    tier (flow-level capacity is what matters for the fluid simulator; the
+    paper's §5.3 config is port-count-exact, ours is capacity-exact).
+    """
+    t = Topology()
+    host_bw = bw
+    # leaf: hosts_per_leaf * bw down, spread over aggs_per_pod uplinks
+    leaf_up_bw = hosts_per_leaf * bw / aggs_per_pod
+    # agg: leaves_per_pod * leaf_up_bw down, one core uplink per agg
+    agg_up_bw = leaves_per_pod * leaf_up_bw
+    for j in range(aggs_per_pod):
+        t.add_switch(f"C{j}")           # one core (group) per agg plane
+    for p in range(n_pods):
+        for j in range(aggs_per_pod):
+            t.add_switch(f"A{p}.{j}")
+        for l in range(leaves_per_pod):
+            leaf = f"L{p}.{l}"
+            t.add_switch(leaf)
+            for h in range(hosts_per_leaf):
+                hn = f"h{p}.{l}.{h}"
+                t.add_host(hn)
+                t.connect(hn, leaf, host_bw, delay)
+            for j in range(aggs_per_pod):
+                t.connect(leaf, f"A{p}.{j}", leaf_up_bw, delay)
+        for j in range(aggs_per_pod):
+            t.connect(f"A{p}.{j}", f"C{j}", agg_up_bw, delay)
+    return t
+
+
+def host_ip_map(topo: Topology) -> Dict[str, int]:
+    """Stable host-name -> integer IP assignment (IPs >= 1)."""
+    return {h: i + 1 for i, h in enumerate(topo.hosts)}

@@ -1,0 +1,263 @@
+"""Gleam high-level API: network wiring + multicast groups.
+
+``GleamNetwork`` owns a topology + PacketSim and provides
+
+- ``multicast_group(members)`` -> ``MulticastGroup`` with:
+  * ``register()``        — the Appendix-A envelope registration (Alg. 4):
+    master collects member L3/L4 states, envelopes flow hop-by-hop
+    building the extended forwarding tables, members answer ACKs;
+  * ``bcast(nbytes)``     — one-to-many SEND through the virtual RC
+    connection (Alg. 1 forwarding + Algs. 2/3 feedback aggregation);
+  * ``write(nbytes)``     — one-to-many WRITE: an MR_UPDATE message
+    precedes each request so leaf switches rewrite va/rkey (§3.3);
+    ``same_mr=True`` enables the Appendix-C optimization (all receivers
+    share VA/R_key: no MR_UPDATE traffic, models the modified-RNIC mode);
+  * ``switch_source(m)``  — Appendix-B source rotation with sqPSN/rqPSN
+    synchronization and NO re-registration;
+- ``unicast_qp(a, b)``    — plain RC connections for the baselines.
+
+Completion bookkeeping: every submitted group message records the sender
+CQE time (cumulative aggregated ACK covered the last PSN — hardware
+reliability) and each receiver's delivery time, so benchmarks can measure
+JCT, IOPS and IO latency exactly as §5 defines them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import packet as pk
+from repro.core.endpoint import QP
+from repro.core.fattree import Topology
+from repro.core.packetsim import Host, PacketSim
+
+VIRTUAL_QPN = 0x1
+GROUP_IP_BASE = 1 << 20          # far above any host IP
+ENVELOPE_MAX_NODES = 183         # MTU-limited (Appendix A, Fig. 17)
+
+
+@dataclasses.dataclass
+class MsgRecord:
+    msg_id: int
+    nbytes: int
+    t_submit: float
+    t_sender_cqe: float = -1.0
+    t_deliver: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def jct(self, n_receivers: int) -> float:
+        if len(self.t_deliver) < n_receivers:
+            return float("inf")
+        return max(self.t_deliver.values()) - self.t_submit
+
+    @property
+    def io_latency(self) -> float:
+        return self.t_sender_cqe - self.t_submit
+
+
+class MulticastGroup:
+    def __init__(self, net: "GleamNetwork", members: Sequence[str],
+                 group_ip: int, *, master: Optional[str] = None,
+                 mtu: int = pk.MTU, window: int = 256,
+                 ack_freq: int = 4, rto: float = 200e-6):
+        self.net = net
+        self.members = list(members)
+        self.group_ip = group_ip
+        self.master = master or self.members[0]
+        self.source = self.master
+        self.qps: Dict[str, QP] = {}
+        self.records: Dict[int, MsgRecord] = {}
+        self._next_msg = 0
+        self.registered = False
+        self.register_time = -1.0
+        sim = net.sim
+        for m in self.members:
+            h = sim.hosts[m]
+            qpn = net.alloc_qpn(m)
+            qp = QP(qpn, h.ip, group_ip, VIRTUAL_QPN,
+                    link_bw=net.host_bw(m), mtu=mtu, window=window,
+                    ack_freq=ack_freq, rto=rto)
+            va = 0x1000_0000 + qpn * 0x10000
+            rkey = 0x100 + qpn
+            qp.register_mr(rkey, va, 1 << 30)
+            qp.on_complete = self._mk_on_complete()
+            qp.on_deliver = self._mk_on_deliver(m)
+            self.qps[m] = h.add_qp(qp)
+        self._acked: set = set()
+
+    # ------------------------------------------------------------ control
+
+    def _records_payload(self) -> List[dict]:
+        out = []
+        for m in self.members:
+            qp = self.qps[m]
+            va, _ = next(iter(qp.mrs.values()))[0], None
+            rkey = next(iter(qp.mrs.keys()))
+            out.append({"ip": qp.ip, "qpn": qp.qpn,
+                        "va": qp.mrs[rkey][0], "rkey": rkey})
+        return out
+
+    def register(self, *, run: bool = True) -> float:
+        """Appendix-A centralized registration; returns completion time."""
+        sim = self.net.sim
+        master_host = sim.hosts[self.master]
+        nodes = self._records_payload()
+        n_pkts = max(1, math.ceil(len(nodes) / ENVELOPE_MAX_NODES))
+        for i in range(n_pkts):
+            chunk = nodes[i * ENVELOPE_MAX_NODES:(i + 1) * ENVELOPE_MAX_NODES]
+            env = pk.Packet(pk.ENVELOPE, master_host.ip, self.group_ip,
+                            size=pk.HDR + 8 + 11 * len(chunk),
+                            payload={"group_ip": self.group_ip,
+                                     "master_ip": master_host.ip,
+                                     "nodes": chunk, "seq": i,
+                                     "total": n_pkts})
+            sim.send_control(master_host, env, sim.now)
+        # membership affirmation (② in Fig. 4)
+        expected = {m for m in self.members if m != self.master}
+
+        def on_env(host: Host):
+            def fn(p: pk.Packet, now: float):
+                my = any(n["ip"] == host.ip for n in p.payload["nodes"])
+                if my and host.ip != p.payload["master_ip"]:
+                    ack = pk.Packet(pk.ENVELOPE_ACK, host.ip,
+                                    p.payload["master_ip"],
+                                    payload=self.group_ip)
+                    sim.send_control(host, ack, now)
+            return fn
+
+        def on_env_ack(p: pk.Packet, now: float):
+            if p.payload == self.group_ip:
+                self._acked.add(p.src_ip)
+                if len(self._acked) >= len(expected):
+                    self.registered = True
+                    self.register_time = now
+
+        for m in self.members:
+            sim.hosts[m].on_envelope = on_env(sim.hosts[m])
+        master_host.on_envelope_ack = on_env_ack
+        if run:
+            sim.run(until=sim.now + 1.0)
+            assert self.registered, "registration did not complete"
+        return self.register_time
+
+    # -------------------------------------------------------------- data
+
+    def _mk_on_complete(self):
+        def fn(msg, now):
+            rec = self.records.get(msg.msg_id)
+            if rec is not None:
+                rec.t_sender_cqe = now
+        return fn
+
+    def _mk_on_deliver(self, member: str):
+        def fn(msg_id, now):
+            rec = self.records.get(msg_id)
+            if rec is not None:
+                rec.t_deliver[member] = now
+        return fn
+
+    def n_receivers(self) -> int:
+        return len(self.members) - 1
+
+    def bcast(self, nbytes: int, *, now: Optional[float] = None) -> MsgRecord:
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        qp = self.qps[self.source]
+        mid = self._next_msg
+        self._next_msg += 1
+        self.records[mid] = MsgRecord(mid, nbytes, t)
+        qp.submit(nbytes, t, op="send", msg_id=mid)
+        sim.kick(sim.hosts[self.source], t)
+        return self.records[mid]
+
+    def write(self, nbytes: int, *, same_mr: bool = False,
+              now: Optional[float] = None) -> MsgRecord:
+        """One-to-many WRITE.  Without Appendix C (same_mr=False) every
+        request is preceded by an MR_UPDATE message carrying per-receiver
+        (va, rkey) for the leaf switches to install (§3.3)."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        qp = self.qps[self.source]
+        mid = self._next_msg
+        self._next_msg += 1
+        self.records[mid] = MsgRecord(mid, nbytes, t)
+        if not same_mr:
+            mr_map = {}
+            for m in self.members:
+                if m == self.source:
+                    continue
+                rqp = self.qps[m]
+                rkey = next(iter(rqp.mrs.keys()))
+                mr_map[rqp.ip] = (rqp.mrs[rkey][0], rkey)
+            upd_bytes = 12 * len(mr_map) + 16
+            qp.submit(upd_bytes, t, op="mr_update", payload=mr_map,
+                      msg_id=-mid - 1)
+        rkey0 = next(iter(self.qps[self.source].mrs.keys()))
+        va0 = self.qps[self.source].mrs[rkey0][0]
+        qp.submit(nbytes, t, op="write", va=va0, rkey=rkey0, msg_id=mid)
+        sim.kick(sim.hosts[self.source], t)
+        return self.records[mid]
+
+    # --------------------------------------------------------- Appendix B
+
+    def switch_source(self, new_source: str) -> None:
+        assert new_source in self.members
+        old = self.qps[self.source]
+        new = self.qps[new_source]
+        old.sync_psn_for_source_switch(becoming_source=False)
+        new.sync_psn_for_source_switch(becoming_source=True)
+        self.source = new_source
+
+    # ------------------------------------------------------------- stats
+
+    def run_until_delivered(self, rec: MsgRecord,
+                            timeout: float = 5.0) -> float:
+        sim = self.net.sim
+        deadline = sim.now + timeout
+        while (len(rec.t_deliver) < self.n_receivers()
+               or rec.t_sender_cqe < 0):
+            before = sim.events
+            sim.run(until=deadline)
+            if sim.events == before or sim.now >= deadline:
+                break
+        return rec.jct(self.n_receivers())
+
+
+class GleamNetwork:
+    def __init__(self, topo: Topology, **sim_kw):
+        self.topo = topo
+        self.sim = PacketSim(topo, **sim_kw)
+        self._qpn: Dict[str, int] = {}
+        self._groups = 0
+
+    def alloc_qpn(self, host: str) -> int:
+        n = self._qpn.get(host, 16) + 1
+        self._qpn[host] = n
+        return n
+
+    def host_bw(self, host: str) -> float:
+        return self.topo.link(host, 0).bw
+
+    def multicast_group(self, members: Sequence[str],
+                        **kw) -> MulticastGroup:
+        g = MulticastGroup(self, members,
+                           GROUP_IP_BASE + self._groups, **kw)
+        self._groups += 1
+        return g
+
+    def unicast_qp(self, a: str, b: str, *, mtu: int = pk.MTU,
+                   window: int = 256, ack_freq: int = 4,
+                   rto: float = 200e-6) -> tuple[QP, QP]:
+        """A plain RC connection a -> b (baselines: multiple unicasts,
+        overlay relays)."""
+        ha, hb = self.sim.hosts[a], self.sim.hosts[b]
+        qa = QP(self.alloc_qpn(a), ha.ip, hb.ip, 0,
+                link_bw=self.host_bw(a), mtu=mtu, window=window,
+                ack_freq=ack_freq, rto=rto)
+        qb = QP(self.alloc_qpn(b), hb.ip, ha.ip, qa.qpn,
+                link_bw=self.host_bw(b), mtu=mtu, window=window,
+                ack_freq=ack_freq, rto=rto)
+        qa.dst_qpn = qb.qpn
+        ha.add_qp(qa)
+        hb.add_qp(qb)
+        return qa, qb

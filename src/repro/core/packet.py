@@ -1,0 +1,114 @@
+"""Packet model for the faithful Gleam layer (DESIGN.md §2.1).
+
+One dataclass covers every packet kind the paper uses:
+
+- DATA      — RC data segment (SEND or WRITE; WRITE's first packet carries
+              the RETH MR info: va / rkey).
+- ACK       — cumulative acknowledgement: acks every PSN <= psn.
+- NACK      — out-of-sequence NAK: psn is the receiver's *expected* PSN;
+              implicitly acks every PSN < psn (go-back-N semantics, §3.4).
+- CNP       — congestion notification (DCQCN-style); carries no PSN.
+- ENVELOPE  — control-plane registration (Appendix A, Fig. 17); payload is
+              the list of member (ip, qpn, va, rkey) states.
+- ENVELOPE_ACK — member participation confirmation back to the master.
+- MR_UPDATE — the extra small WRITE preceding each one-to-many WRITE that
+              carries per-receiver MR states for the leaf switches (§3.3).
+
+PSNs live in a 24-bit space (2^23 comparison window per the IB spec; the
+P4 mode tightens it to 2^22 — §4).  ``psn_geq``/``psn_gt`` implement the
+wrapped comparison used everywhere instead of raw ``>=``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+MTU = 1500                      # bytes of payload per DATA packet
+HDR = 58                        # Eth+IP+UDP+BTH+ICRC overhead bytes
+ACK_SIZE = 64                   # feedback packets are minimum-size frames
+PSN_BITS = 24
+PSN_MOD = 1 << PSN_BITS
+PSN_WINDOW = 1 << 23            # standard comparison window
+PSN_WINDOW_P4 = 1 << 22         # P4 single-stage variant (§4)
+
+DATA = "data"
+ACK = "ack"
+NACK = "nack"
+CNP = "cnp"
+ENVELOPE = "envelope"
+ENVELOPE_ACK = "envelope_ack"
+MR_UPDATE = "mr_update"
+
+_ids = itertools.count()
+
+
+def psn_add(a: int, b: int) -> int:
+    return (a + b) % PSN_MOD
+
+
+def psn_sub(a: int, b: int) -> int:
+    return (a - b) % PSN_MOD
+
+
+def psn_geq(a: int, b: int, window: int = PSN_WINDOW) -> bool:
+    """a >= b in the wrapped PSN space (within `window` of each other)."""
+    return psn_sub(a, b) < window
+
+
+def psn_gt(a: int, b: int, window: int = PSN_WINDOW) -> bool:
+    return a != b and psn_geq(a, b, window)
+
+
+def psn_max(a: int, b: int, window: int = PSN_WINDOW) -> int:
+    return a if psn_geq(a, b, window) else b
+
+
+def psn_min(a: int, b: int, window: int = PSN_WINDOW) -> int:
+    return b if psn_geq(a, b, window) else a
+
+
+@dataclasses.dataclass
+class Packet:
+    kind: str
+    src_ip: int
+    dst_ip: int                  # GroupIP for multicast traffic
+    dst_qpn: int = 0
+    src_qpn: int = 0
+    psn: int = 0
+    size: int = ACK_SIZE         # bytes on the wire (payload + headers)
+    # WRITE / RETH state (first packet of a WRITE request)
+    op: str = "send"             # send | write
+    va: int = 0
+    rkey: int = 0
+    # message bookkeeping (not on the wire; simulation-side)
+    msg_id: int = 0
+    last: bool = False           # end-of-message bit
+    ecn: bool = False            # ECN-CE mark (switch sets under congestion)
+    payload: Any = None
+    uid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    def copy(self) -> "Packet":
+        p = dataclasses.replace(self, uid=next(_ids))
+        return p
+
+
+def data_packet(src_ip, dst_ip, dst_qpn, psn, nbytes, *, op="send", va=0,
+                rkey=0, msg_id=0, last=False, src_qpn=0) -> Packet:
+    return Packet(DATA, src_ip, dst_ip, dst_qpn=dst_qpn, src_qpn=src_qpn,
+                  psn=psn, size=nbytes + HDR, op=op, va=va, rkey=rkey,
+                  msg_id=msg_id, last=last)
+
+
+def ack_packet(src_ip, dst_ip, psn, *, dst_qpn=0, ecn=False) -> Packet:
+    return Packet(ACK, src_ip, dst_ip, dst_qpn=dst_qpn, psn=psn,
+                  size=ACK_SIZE, ecn=ecn)
+
+
+def nack_packet(src_ip, dst_ip, epsn, *, dst_qpn=0) -> Packet:
+    return Packet(NACK, src_ip, dst_ip, dst_qpn=dst_qpn, psn=epsn,
+                  size=ACK_SIZE)
+
+
+def cnp_packet(src_ip, dst_ip, *, dst_qpn=0) -> Packet:
+    return Packet(CNP, src_ip, dst_ip, dst_qpn=dst_qpn, size=ACK_SIZE)

@@ -1,0 +1,237 @@
+"""Event-driven packet-level simulator (the ns-3 analogue of §5.3).
+
+Models: per-egress FIFO serialization at link rate, propagation delay,
+ECN marking on backlog, random packet discard at switch egress ("emulated
+via randomly discarding packets in the middle switches"), RC endpoints
+(endpoint.QP) on hosts, Gleam switches (switch.GleamSwitch) in the fabric.
+
+The engine is deliberately simple: a heapq of (time, seq, fn) events.
+Hosts emit through a single NIC egress; data-plane pacing is ACK-clocked
+go-back-N + DCQCN rate limiting inside the QPs.
+
+A packet addressed to a QPN a host does not own is counted in
+``no_qp_drops`` — this is exactly the Fig. 3 incompatibility (traditional
+L3 multicast forwarding delivers packets no RC QP matches), which the
+tests reproduce.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+from repro.core import packet as pk
+from repro.core.endpoint import INF, QP
+from repro.core.fattree import Topology, host_ip_map
+from repro.core.switch import GleamSwitch
+
+
+class Host:
+    def __init__(self, name: str, ip: int, sim: "PacketSim"):
+        self.name = name
+        self.ip = ip
+        self.sim = sim
+        self.qps: Dict[int, QP] = {}
+        self.ctrl: deque = deque()          # feedback/control, priority
+        self.no_qp_drops = 0
+        self.on_envelope: Optional[Callable] = None
+        self.on_envelope_ack: Optional[Callable] = None
+        self._qp_rr = 0
+        self._kick_t = INF
+        # per-message CPU submission overhead (storage-stack model, §5.2.2)
+        self.overhead = 0.0
+
+    def add_qp(self, qp: QP) -> QP:
+        self.qps[qp.qpn] = qp
+        return qp
+
+    # ------------------------------------------------------------ receive
+
+    def on_packet(self, p: pk.Packet, now: float) -> None:
+        if p.kind == pk.DATA:
+            qp = self.qps.get(p.dst_qpn)
+            if qp is None:
+                self.no_qp_drops += 1       # Fig. 3: no matching QP
+                return
+            for fb in qp.on_data(p, now):
+                self.ctrl.append(fb)
+            self.sim.kick(self, now)
+            return
+        if p.kind in (pk.ACK, pk.NACK, pk.CNP):
+            qp = self.qps.get(p.dst_qpn)
+            if qp is None:
+                self.no_qp_drops += 1
+                return
+            if p.kind == pk.ACK:
+                qp.on_ack(p.psn, now)
+            elif p.kind == pk.NACK:
+                qp.on_nack(p.psn, now)
+            else:
+                qp.on_cnp(now)
+            self.sim.arm_timer(qp, self)
+            self.sim.kick(self, now)
+            return
+        if p.kind == pk.ENVELOPE:
+            if self.on_envelope:
+                self.on_envelope(p, now)
+            return
+        if p.kind == pk.ENVELOPE_ACK and self.on_envelope_ack:
+            self.on_envelope_ack(p, now)
+
+    # ------------------------------------------------------------ emit
+
+    def next_emission(self, now: float):
+        """(packet or None, next time anything becomes ready)."""
+        if self.ctrl:
+            return self.ctrl.popleft(), now
+        qpns = [q for q in self.qps.values() if q.sq_psn != q.snd_nxt
+                or q.snd_una != q.sq_psn]
+        earliest = INF
+        for i in range(len(qpns)):
+            qp = qpns[(self._qp_rr + i) % len(qpns)]
+            p, t = qp.next_packet(now)
+            if p is not None:
+                self._qp_rr = (self._qp_rr + i + 1) % max(len(qpns), 1)
+                self.sim.arm_timer(qp, self)
+                return p, t
+            earliest = min(earliest, t)
+        return None, earliest
+
+
+class PacketSim:
+    def __init__(self, topo: Topology, *, loss_rate: float = 0.0,
+                 seed: int = 0, p4_mode: bool = False,
+                 ecn_backlog: float = INF, drop_feedback: bool = False):
+        self.topo = topo
+        self.loss_rate = loss_rate
+        self.drop_feedback = drop_feedback
+        self.rng = random.Random(seed)
+        self.ecn_backlog = ecn_backlog      # seconds of egress backlog
+        self.host_ip = host_ip_map(topo)
+        self.hosts: Dict[str, Host] = {
+            h: Host(h, ip, self) for h, ip in self.host_ip.items()}
+        self.by_ip: Dict[int, Host] = {h.ip: h for h in self.hosts.values()}
+        self.switches: Dict[str, GleamSwitch] = {
+            s: GleamSwitch(s, topo, self.host_ip, p4_mode=p4_mode)
+            for s in topo.switches}
+        self._q: List = []
+        self._seq = itertools.count()
+        self._free: Dict[tuple, float] = {}   # (node, port) -> egress free t
+        self.now = 0.0
+        self.events = 0
+        self.dropped = 0
+        self.tx_bytes = 0
+
+    # ------------------------------------------------------------ engine
+
+    def schedule(self, t: float, fn: Callable[[float], None]) -> None:
+        heapq.heappush(self._q, (t, next(self._seq), fn))
+
+    def run(self, until: float = INF, max_events: int = 50_000_000) -> float:
+        while self._q:
+            t, _, fn = heapq.heappop(self._q)
+            if t > until:
+                self.now = until
+                break
+            self.now = t
+            fn(t)
+            self.events += 1
+            if self.events > max_events:
+                raise RuntimeError("event budget exceeded")
+        return self.now
+
+    # ------------------------------------------------------------ links
+
+    def send(self, node: str, port: int, p: pk.Packet, now: float) -> None:
+        link = self.topo.link(node, port)
+        key = (node, port)
+        start = max(now, self._free.get(key, 0.0))
+        done = start + p.size / link.bw
+        self._free[key] = done
+        self.tx_bytes += p.size
+        if done - now > self.ecn_backlog and p.kind == pk.DATA:
+            p.ecn = True
+        peer, peer_port = self.topo.peer(node, port)
+        is_switch = node in self.switches
+        if is_switch and self.loss_rate > 0.0 and (
+                p.kind == pk.DATA or self.drop_feedback):
+            if self.rng.random() < self.loss_rate:
+                self.dropped += 1
+                return
+        self.schedule(done + link.delay,
+                      lambda t, pr=peer, pp=peer_port, q=p:
+                      self._arrive(pr, pp, q, t))
+
+    def _arrive(self, node: str, in_port: int, p: pk.Packet,
+                now: float) -> None:
+        sw = self.switches.get(node)
+        if sw is not None:
+            for out_port, q in sw.on_packet(p, in_port, now):
+                self.send(node, out_port, q, now)
+            return
+        self.hosts[node].on_packet(p, now)
+
+    # ------------------------------------------------------------ hosts
+
+    def kick(self, host: Host, now: float) -> None:
+        """Run the host NIC emission loop now (packet arrival, submit).
+
+        Does NOT touch the wakeup marker — only _fire consumes it — so
+        repeated kicks while the NIC is serializing dedupe to a single
+        scheduled wakeup instead of multiplying events."""
+        self._run_host(host, now)
+
+    def _run_host(self, host: Host, now: float) -> None:
+        key = (host.name, 0)
+        free = self._free.get(key, 0.0)
+        if free > now + 1e-15:              # NIC serializing: come back
+            self._arm_kick(host, free)
+            return
+        p, t_next = host.next_emission(now)
+        if p is not None:
+            self.send(host.name, 0, p, now)
+            self._arm_kick(host, self._free[key])
+        elif t_next < INF:
+            self._arm_kick(host, t_next)
+
+    def _arm_kick(self, host: Host, t: float) -> None:
+        if host._kick_t <= t + 1e-15:
+            return                          # earlier wakeup already armed
+        host._kick_t = t
+        self.schedule(t, lambda tt, h=host: self._fire(h, tt))
+
+    def _fire(self, host: Host, now: float) -> None:
+        if host._kick_t < now - 1e-15:
+            return                          # superseded by an earlier fire
+        host._kick_t = INF                  # consume the marker
+        self._run_host(host, now)
+
+    # ------------------------------------------------------------ timers
+
+    def arm_timer(self, qp: QP, host: Host) -> None:
+        t = qp.timer_deadline
+        if t == INF:
+            return
+        pending = getattr(qp, "_timer_ev", INF)
+        if pending <= t + 1e-15:
+            return
+        qp._timer_ev = t
+        self.schedule(t, lambda tt, q=qp, h=host: self._timer_fire(q, h, tt))
+
+    def _timer_fire(self, qp: QP, host: Host, now: float) -> None:
+        qp._timer_ev = INF
+        if qp.timer_deadline <= now + 1e-12:
+            qp.on_timeout(now)
+            self.kick(host, now)
+        self.arm_timer(qp, host)
+
+    # ------------------------------------------------------- convenience
+
+    def host_of_ip(self, ip: int) -> Host:
+        return self.by_ip[ip]
+
+    def send_control(self, host: Host, p: pk.Packet, now: float) -> None:
+        host.ctrl.append(p)
+        self.kick(host, now)

@@ -1,0 +1,294 @@
+"""Gleam switch data plane + control plane (§3.3–§3.5, §4, Appendix A).
+
+Implements, faithfully:
+
+- **Algorithm 1** — one-to-many data forwarding with per-port header
+  rewrite (`connected` entries get dest IP/QPN replaced, src IP becomes
+  GroupIP; WRITE packets additionally get their RETH va/rkey replaced from
+  the per-receiver MR states).
+- **Algorithms 2 & 3** — many-to-one ACK aggregation and NACK filtering:
+  per-port cumulative ``ack_psn``; the aggregated ACK carries the minimum
+  over downstream ports and is emitted when that minimum advances; a NACK
+  is forwarded only when every receiver has acknowledged everything below
+  its expected PSN (the Fig. 7 ordering hazard).
+- **Algorithm 4** — envelope-driven table registration: reuse already-
+  `forwarded` ports (optimal tree), least-utilized port for new ones
+  (group-level load balancing), per-port sub-envelopes downstream.
+- **§3.5 congestion-signal filtering** — per-port CNP counters with aging;
+  only the most-congested port's signal passes upstream.
+- **Appendix B source switching** — ``ack_out_port`` is re-learned when
+  data enters a new port; the entry facing the current source is excluded
+  from aggregation (it is the one port that never ACKs).
+- **§4 P4 mode** — wrapped PSN comparisons in a 2^22 window instead of
+  2^23.
+
+The switch is transport-agnostic plumbing: it returns (out_port, packet)
+emissions and the simulator owns queues, delays, ECN marking, and loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import packet as pk
+from repro.core.fattree import Topology
+from repro.core.ftable import (CONNECTED, FORWARDED, ForwardingTables,
+                               GroupTable)
+
+Emit = Tuple[int, pk.Packet]
+
+
+@dataclasses.dataclass
+class SwitchStats:
+    data_in: int = 0
+    data_copies: int = 0
+    acks_in: int = 0
+    acks_out: int = 0
+    nacks_in: int = 0
+    nacks_out: int = 0
+    cnps_in: int = 0
+    cnps_out: int = 0
+    envelopes: int = 0
+
+
+class GleamSwitch:
+    """One Gleam-capable switch; plain unicast forwarding for everything
+    that doesn't hit a multicast table."""
+
+    def __init__(self, name: str, topo: Topology, host_ip: Dict[str, int],
+                 *, p4_mode: bool = False, cnp_aging_tau: float = 100e-6):
+        self.name = name
+        self.topo = topo
+        self.host_ip = host_ip
+        self.ip_host = {v: k for k, v in host_ip.items()}
+        self.tables = ForwardingTables(p4_mode=p4_mode)
+        self.port_util: Dict[int, int] = {}     # group registrations / port
+        self.stats = SwitchStats()
+        self.cnp_tau = cnp_aging_tau
+        self._cnp_t: Dict[Tuple[int, int], float] = {}  # (group, port) -> t
+        self.p4_mode = p4_mode
+
+    # --------------------------------------------------------- entry point
+
+    def on_packet(self, p: pk.Packet, in_port: int, now: float) -> List[Emit]:
+        if p.kind == pk.ENVELOPE:
+            return self._envelope(p, in_port, now)
+        t = self.tables.get(p.dst_ip)
+        if t is None:
+            return self._unicast(p)
+        if p.kind == pk.DATA:
+            return self._data(t, p, in_port, now)
+        if p.kind == pk.ACK:
+            return self._ack(t, p, in_port, now)
+        if p.kind == pk.NACK:
+            return self._nack(t, p, in_port, now)
+        if p.kind == pk.CNP:
+            return self._cnp(t, p, in_port, now)
+        if p.kind == pk.ENVELOPE:
+            return self._envelope(p, in_port, now)
+        return self._unicast(p)
+
+    def route_envelope(self, p: pk.Packet, in_port: int,
+                       now: float) -> List[Emit]:
+        return self._envelope(p, in_port, now)
+
+    # --------------------------------------------------------- data plane
+
+    def _unicast(self, p: pk.Packet) -> List[Emit]:
+        if p.kind == pk.ENVELOPE:
+            return []  # envelopes are consumed by _envelope
+        host = self.ip_host.get(p.dst_ip)
+        if host is None:
+            return []
+        port = self.topo.next_hop_port(
+            self.name, host, flow_key=p.src_ip * 131 + p.dst_qpn)
+        return [(port, p)]
+
+    def _data(self, t: GroupTable, p: pk.Packet, in_port: int,
+              now: float) -> List[Emit]:
+        """Algorithm 1 (+ MR-update interception, + Appendix B learning)."""
+        self.stats.data_in += 1
+        if t.ack_out_port != in_port:
+            # first data packet, or multicast source switched (Appendix B):
+            # feedback must now exit through the new ingress port.
+            t.ack_out_port = in_port
+        if p.op == "mr_update" and isinstance(p.payload, dict):
+            # §3.3: the extra WRITE message carrying per-receiver MR info.
+            # Update connected entries, then forward it as normal data so
+            # every downstream switch (and receiver, for PSN continuity)
+            # sees it.
+            for e in t.entries.values():
+                if e.type == CONNECTED and e.dest_ip in p.payload:
+                    e.va, e.rkey = p.payload[e.dest_ip]
+        out: List[Emit] = []
+        for e in t.entries.values():
+            if e.port == in_port:
+                continue
+            q = p.copy()
+            if e.type == CONNECTED:
+                q.dst_ip = e.dest_ip
+                q.dst_qpn = e.dest_qpn
+                q.src_ip = t.group_ip     # feedback will route by GroupIP
+                if q.op == "write":       # rewrite RETH per receiver (§3.3)
+                    q.va, q.rkey = e.va, e.rkey
+            out.append((e.port, q))
+        self.stats.data_copies += len(out)
+        return out
+
+    # ------------------------------------------------------ feedback plane
+
+    def _agg_entries(self, t: GroupTable):
+        """Entries that participate in aggregation: every tree port except
+        the one facing the current source (it never ACKs)."""
+        return [e for e in t.entries.values() if e.port != t.ack_out_port]
+
+    def _ack(self, t: GroupTable, p: pk.Packet, in_port: int,
+             now: float) -> List[Emit]:
+        """Algorithm 2, ACK branch."""
+        self.stats.acks_in += 1
+        e = t.entries.get(in_port)
+        if e is None or t.ack_out_port is None:
+            return []
+        w = t.psn_window
+        if pk.psn_geq(p.psn, e.ack_psn, w):
+            e.ack_psn = p.psn
+        return self._generate(t, now)
+
+    def _nack(self, t: GroupTable, p: pk.Packet, in_port: int,
+              now: float) -> List[Emit]:
+        """Algorithm 2, NACK branch (lines 12-17)."""
+        self.stats.nacks_in += 1
+        e = t.entries.get(in_port)
+        if e is None or t.ack_out_port is None:
+            return []
+        w = t.psn_window
+        implied = pk.psn_sub(p.psn, 1)          # NACK acks everything < ePSN
+        if pk.psn_geq(implied, e.ack_psn, w):
+            e.ack_psn = implied
+        if t.nack_epsn is None or pk.psn_geq(t.nack_epsn, p.psn, w):
+            t.nack_epsn = p.psn
+        return self._generate(t, now)
+
+    def _generate(self, t: GroupTable, now: float) -> List[Emit]:
+        """Algorithm 3: aggregated ACK when the minimum advances; NACK only
+        when all receivers acked everything below its expected PSN."""
+        entries = self._agg_entries(t)
+        if not entries:
+            return []
+        w = t.psn_window
+        mn, mport = entries[0].ack_psn, entries[0].port
+        for e in entries[1:]:
+            m2 = pk.psn_min(mn, e.ack_psn, w)
+            if m2 != mn:
+                mn, mport = e.ack_psn, e.port
+        out: List[Emit] = []
+        if pk.psn_gt(mn, t.last_ack_psn, w):
+            out.append((t.ack_out_port,
+                        self._feedback(t, pk.ack_packet(t.group_ip,
+                                                        t.group_ip, mn))))
+            t.last_ack_psn = mn
+            self.stats.acks_out += 1
+        if t.nack_epsn is not None:
+            if pk.psn_add(mn, 1) == t.nack_epsn:
+                out.append((t.ack_out_port,
+                            self._feedback(t, pk.nack_packet(
+                                t.group_ip, t.group_ip, t.nack_epsn))))
+                t.nack_epsn = None
+                self.stats.nacks_out += 1
+            elif pk.psn_geq(mn, t.nack_epsn, w):
+                t.nack_epsn = None   # loss already recovered downstream
+        return out
+
+    def _feedback(self, t: GroupTable, q: pk.Packet) -> pk.Packet:
+        """Rewrite feedback headers at the source-facing hop ('L1 changes
+        the connection-related states in the ACK header to match S's QP')."""
+        e = t.entries.get(t.ack_out_port)
+        if e is not None and e.type == CONNECTED:
+            q.dst_ip = e.dest_ip
+            q.dst_qpn = e.dest_qpn
+        return q
+
+    # -------------------------------------------------- congestion (§3.5)
+
+    def _cnp(self, t: GroupTable, p: pk.Packet, in_port: int,
+             now: float) -> List[Emit]:
+        self.stats.cnps_in += 1
+        if t.ack_out_port is None:
+            return []
+        key = (t.group_ip, in_port)
+        # exponential aging (the paper's periodic aging, continuous form)
+        last = self._cnp_t.get(key, now)
+        cnt = t.cnp_count.get(in_port, 0.0)
+        cnt = cnt * math.exp(-(now - last) / self.cnp_tau) + 1.0
+        t.cnp_count[in_port] = cnt
+        self._cnp_t[key] = now
+        # age the others lazily for the comparison
+        most = True
+        for port, c in t.cnp_count.items():
+            if port == in_port:
+                continue
+            lp = self._cnp_t.get((t.group_ip, port), now)
+            c_aged = c * math.exp(-(now - lp) / self.cnp_tau)
+            if c_aged > cnt:
+                most = False
+                break
+        if not most:
+            return []      # filtered: not the most congested link
+        self.stats.cnps_out += 1
+        return [(t.ack_out_port, self._feedback(t, p.copy()))]
+
+    # ------------------------------------------------- control plane (A)
+
+    def _envelope(self, p: pk.Packet, in_port: int, now: float) -> List[Emit]:
+        """Algorithm 4: build the local table, emit per-port sub-envelopes."""
+        self.stats.envelopes += 1
+        info = p.payload
+        g = info["group_ip"]
+        t = self.tables.get(g) or self.tables.create(g)
+        # Make the tree traversable from ANY member (Appendix B: the master
+        # "can be any node" and the source may rotate): the upstream port the
+        # envelope entered through is part of the tree too.  If it faces a
+        # host the node-record branch below creates the connected entry;
+        # otherwise it is a forwarded entry.
+        up_peer = self.topo.ports[self.name][in_port][0]
+        if up_peer not in self.host_ip and in_port not in t.entries:
+            t.add_forwarded(in_port)
+        down: Dict[int, list] = {}
+        for node in info["nodes"]:
+            ip = node["ip"]
+            host = self.ip_host.get(ip)
+            if host is None:
+                continue
+            # directly connected?
+            direct = None
+            for port, (peer, _) in self.topo.ports[self.name].items():
+                if peer == host:
+                    direct = port
+                    break
+            if direct is not None:
+                t.add_connected(direct, ip, node["qpn"],
+                                node.get("va", 0), node.get("rkey", 0))
+                self.port_util[direct] = self.port_util.get(direct, 0) + 1
+                down.setdefault(direct, []).append(node)
+                continue
+            cands = self.topo.candidate_ports(self.name, host)
+            cands = [c for c in cands if c != in_port]
+            if not cands:
+                continue
+            reuse = [c for c in cands
+                     if c in t.entries and t.entries[c].type == FORWARDED]
+            if reuse:
+                out = reuse[0]            # reuse existing tree edge
+            else:
+                out = min(cands, key=lambda c: (self.port_util.get(c, 0), c))
+            t.add_forwarded(out)
+            self.port_util[out] = self.port_util.get(out, 0) + 1
+            down.setdefault(out, []).append(node)
+        emits: List[Emit] = []
+        for port, nodes in down.items():
+            q = p.copy()
+            q.payload = {**info, "nodes": nodes}
+            q.size = pk.HDR + 8 + 11 * len(nodes)   # Fig. 17 layout scale
+            emits.append((port, q))
+        return emits

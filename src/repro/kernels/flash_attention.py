@@ -1,0 +1,140 @@
+"""Pallas TPU flash attention (GQA / causal / sliding-window).
+
+TPU-native adaptation of the memory-bound attention hot spot (DESIGN.md
+§6): the online-softmax tiles live in VMEM, sized so each (block_q x
+block_k) score tile plus the f32 (m, l, acc) running statistics fit
+comfortably; block shapes default to MXU-aligned 128 multiples.
+
+Grid: (batch, q_heads, Sq / block_q, Skv / block_k) — the LAST axis is
+the sequential reduction axis on TPU, so the running statistics are
+carried in VMEM scratch across kv-block steps.  Causal and sliding-window
+masks are applied per-tile from broadcasted iotas; fully-masked tiles are
+skipped with pl.when (this is the FLOP saving XLA's masked dense
+attention cannot express — see the §Roofline useful-flops discussion).
+
+GQA is handled in the k/v index_map (kv head = q head // rep) so no
+head replication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, n_kv_blocks: int, kv_limit: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # tile visibility: skip tiles fully outside the causal band / window
+    diag_reachable = k_start <= q_start + block_q - 1
+    if window:
+        in_window = k_start + block_k - 1 > q_start - window
+        visible = diag_reachable & in_window if causal else in_window
+    else:
+        visible = diag_reachable if causal else True
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < kv_limit          # padded KV tail never wins
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    kv_limit: int | None = None,
+                    interpret: bool = False):
+    """q (B, Sq, H, D); k, v (B, Skv, KVH, D) -> (B, Sq, H, D).
+
+    Sq % block_q == 0 and Skv % block_k == 0 (pad upstream).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    rep = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q,
+                                                      block_k)
+    n_q = sq // block_q
+    n_k = skv // block_k
+    # layout: heads-major so each grid step owns a contiguous (S, D) tile
+    qt = q.transpose(0, 2, 1, 3)          # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)          # (B, KVH, Skv, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, n_q, n_k)
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
+        kv_limit=skv if kv_limit is None else kv_limit)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, rep=rep:
+                         (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki, rep=rep:
+                         (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,118 @@
+"""Pallas TPU split-KV flash decode — the per-shard compute under Gleam's
+many-to-one combine tree (DESIGN.md §2.2/§6).
+
+One query token attends a long KV cache.  Grid (batch, q_heads,
+S / block_k); the last axis sequentially reduces KV blocks with running
+(m, l, acc) statistics in VMEM scratch.  Outputs are BOTH the normalized
+attention result and the (m, l) softmax statistics, so the distributed
+layer (core/collectives.softmax_combine) can merge per-shard partials up
+the aggregation tree exactly like the switch merges per-port ack_psn:
+an associative monoid combine (max/rescale-add instead of min).
+
+kv_len masks the unfilled cache tail (continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out, l_out,
+            m_ref, l_ref, acc_ref, *, scale: float, block_k: int,
+            n_kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)             # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        m_out[0, 0] = m_ref[...]
+        l_out[0, 0] = l_ref[...]
+
+
+def flash_decode(q, k, v, kv_len, *, block_k: int = 512,
+                 interpret: bool = False):
+    """q (B, H, D); k, v (B, S, KVH, D); kv_len (B,) int32.
+
+    Returns (out (B, H, D), m (B, H), l (B, H)) — out normalized, (m, l)
+    the softmax statistics for cross-shard combining (acc = out * l).
+    """
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    block_k = min(block_k, s)
+    assert s % block_k == 0, (s, block_k)
+    n_k = s // block_k
+    qt = q[:, :, None, :]                   # (B, H, 1, D)
+    kt = k.transpose(0, 2, 1, 3)            # (B, KVH, S, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, n_k)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(d),
+                             block_k=block_k, n_kv_blocks=n_k)
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # kv_len, full (B,)
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki, rep=rep: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, ki, rep=rep: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, ki: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, hi, ki: (bi, hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qt, kt, vt)
+    return out[:, :, 0, :], m[..., 0], l[..., 0]

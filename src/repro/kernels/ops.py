@@ -1,0 +1,78 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+where the kernels compile to Mosaic.  The wrappers pad ragged sequence
+lengths up to block multiples and slice back, so callers never care about
+tile alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import flash_decode as fd
+from repro.kernels import ssd_scan as ssd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """Drop-in flash attention. q (B,Sq,H,D); k,v (B,Skv,KVH,D)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    sq0, skv0 = q.shape[1], k.shape[1]
+    bq = min(block_q, max(sq0, 16))
+    bk = min(block_k, max(skv0, 16))
+    q, _ = _pad_to(q, 1, bq)
+    k, _ = _pad_to(k, 1, bk)
+    v, _ = _pad_to(v, 1, bk)
+    out = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=bq, block_k=bk, kv_limit=skv0,
+                             interpret=interpret)
+    return out[:, :sq0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k, v, kv_len, *, block_k=512, interpret=None):
+    """Split-KV decode. q (B,H,D); k,v (B,S,KVH,D); kv_len (B,).
+    Returns (out, m, l) — see kernels/flash_decode.py."""
+    interpret = _on_cpu() if interpret is None else interpret
+    s0 = k.shape[1]
+    bk = min(block_k, max(s0, 16))
+    k, _ = _pad_to(k, 1, bk)
+    v, _ = _pad_to(v, 1, bk)
+    return fd.flash_decode(q, k, v, kv_len, block_k=bk,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, B_, C_, *, chunk=128, interpret=None):
+    """Chunked SSD scan. Returns (y, final_state)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    s0 = x.shape[1]
+    ch = min(chunk, max(s0, 16))
+    if s0 % ch:
+        x, _ = _pad_to(x, 1, ch)
+        dt, _ = _pad_to(dt, 1, ch)
+        a, _ = _pad_to(a, 1, ch)       # exp(a)=exp(0)=1 keeps state frozen
+        B_, _ = _pad_to(B_, 1, ch)
+        C_, _ = _pad_to(C_, 1, ch)
+    y, S = ssd.ssd_scan(x, dt, a, B_, C_, chunk=ch, interpret=interpret)
+    return y[:, :s0], S

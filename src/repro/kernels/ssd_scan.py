@@ -1,0 +1,110 @@
+"""Pallas TPU chunked SSD scan (Mamba-2 state-space duality).
+
+The SSD recurrence  S_t = exp(a_t) S_{t-1} + dt_t B_t x_t^T,
+y_t = C_t . S_t  is computed chunk-by-chunk (arXiv:2405.21060 §6):
+inside a chunk the contribution is a masked quadratic "attention-like"
+term (MXU work); across chunks only the (N x P) state is carried.
+
+Grid (batch, heads, S / chunk): the last axis walks chunks sequentially
+with the running state in VMEM scratch — exactly the TPU-native shape of
+the recurrence: chunk-local dense matmuls for the MXU, a tiny carried
+state instead of a length-S serial scan.
+
+VMEM working set per step (chunk=128, N=128, P=64, f32):
+x (128x64) + B/C (128x128) + L (128x128) + state (128x64) + y (128x64)
+~= 320 KB — comfortably inside the ~16 MB VMEM budget, MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, state_ref, *,
+            chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, :, 0].astype(jnp.float32)          # (Q,)
+    B_ = b_ref[0].astype(jnp.float32)               # (Q, N)
+    C_ = c_ref[0].astype(jnp.float32)               # (Q, N)
+
+    cum = jnp.cumsum(a)                              # (Q,)
+    # intra-chunk: L[i, j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(qi >= kj, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    xdt = x * dt[:, None]                            # (Q, P)
+    y_diag = jax.lax.dot_general(scores * L, xdt,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    # inter-chunk: y_off = (C * exp(cum)) @ S_prev
+    S_prev = state_ref[...]                          # (N, P)
+    y_off = jax.lax.dot_general(C_ * jnp.exp(cum)[:, None], S_prev,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+    # state update: S = exp(cum_last) S_prev + B^T (exp(cum_last - cum) dt x)
+    decay = jnp.exp(cum[-1] - cum)                   # (Q,)
+    S_new = (jnp.exp(cum[-1]) * S_prev
+             + jax.lax.dot_general(B_, xdt * decay[:, None],
+                                   (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    state_ref[...] = S_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        s_ref[0, 0] = S_new
+
+
+def ssd_scan(x, dt, a, B_, C_, *, chunk: int = 128,
+             interpret: bool = False):
+    """x (B,S,H,P); dt, a (B,S,H); B_, C_ (B,S,N).
+
+    Returns (y (B,S,H,P) in x.dtype, final state (B,H,N,P) f32).
+    S % chunk == 0 (pad upstream).
+    """
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    grid = (b, h, nc)
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    y, S = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, B_, C_)
+    return y, S

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the single real CPU device and build
+small meshes via ``make_mesh`` below.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh over however many devices are available (tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def single_device_mesh() -> Mesh:
+    """1x1 (data, model) mesh on the first device, for smoke tests.
+
+    All sharding rules resolve to no-op specs; the same model / step code
+    paths run unchanged.
+    """
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,200 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s        (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+    collective = collective_bytes_per_device / link_bw     (~50 GB/s/link)
+
+``cost_analysis()`` supplies flops / bytes for the per-device module.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO
+(compiled.as_text()) and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per training step
+(3x fwd matmul flops for fwd+bwd), divided by chips for the per-device
+comparison with HLO_FLOPs (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array shape in an HLO type string
+    (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # pattern:  %name = TYPE all-gather(...)  /  ... all-gather-start(
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)",
+                     line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        out[base] += _shape_bytes(type_str)
+        counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_detail: dict
+    model_flops_per_device: float
+    memory_stats: dict
+
+    @property
+    def t_compute(self):
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self):
+        if self.flops_per_device == 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_fraction(self):
+        """Useful-compute time over the dominant term: how close the step
+        is to the compute roofline if the bottleneck were removed."""
+        t_star = self.model_flops_per_device / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_star / t_bound if t_bound > 0 else 0.0
+
+    def to_dict(self):
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_detail": self.coll_detail,
+            "model_flops_per_device": self.model_flops_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_stats": self.memory_stats,
+        }
+
+
+def model_flops(cfg, shape_info, n_params_total: int, n_chips: int) -> float:
+    """6*N*D for train, 2*N*D for prefill, 2*N*1 token for decode —
+    active-params for MoE."""
+    n = n_params_total
+    if cfg.n_experts and cfg.top_k:
+        # experts contribute top_k/n_experts of their params per token
+        from repro.models import moe as moe_mod
+        from repro.models.blocks import count_params
+        e_params = count_params(moe_mod.moe_defs(cfg)) - (
+            cfg.d_model * cfg.n_experts)  # router excluded
+        moe_layers = sum(1 for _, f in cfg.pattern if f == "moe")
+        e_total = e_params * cfg.n_blocks * moe_layers / max(
+            sum(1 for _ in cfg.pattern), 1) * len(cfg.pattern)
+        # count_params(moe_defs) is per layer; total expert params:
+        e_total = e_params * cfg.n_blocks * sum(
+            1 for _, f in cfg.pattern if f == "moe")
+        n = n - e_total + e_total * cfg.top_k / cfg.n_experts
+    seq, batch, kind = (shape_info["seq"], shape_info["batch"],
+                        shape_info["kind"])
+    if kind == "train":
+        d = seq * batch
+        f = 6.0 * n * d
+    elif kind == "prefill":
+        d = seq * batch
+        f = 2.0 * n * d
+    else:  # decode: one token per sequence
+        f = 2.0 * n * batch
+    return f / n_chips
+
+
+def summarize(compiled, lowered_text_or_none, cfg, shape_name, shape_info,
+              mesh_name, n_chips, n_params) -> Roofline:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        memory_stats = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not support it
+        memory_stats = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return Roofline(
+        arch=cfg.name, shape=shape_name, mesh=mesh_name, n_chips=n_chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=float(coll["total_bytes"]),
+        coll_detail=coll,
+        model_flops_per_device=model_flops(cfg, shape_info, n_params,
+                                           n_chips),
+        memory_stats=memory_stats)

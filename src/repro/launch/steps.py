@@ -1,0 +1,270 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for everything a step consumes; the
+dry-run lowers against them.  ``train_4k``/``prefill_32k`` lower
+``train_step``/``prefill_step``; ``decode_32k``/``long_500k`` lower
+``serve_step`` (one new token against a seq_len KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as mdl
+from repro.models.blocks import param_shardings, param_structs, count_params
+from repro.optim import adamw
+from repro.parallel.sharding import ShardingPlan
+
+SHAPE_TABLE = {
+    "train_4k": dict(seq=4096, batch=256, kind="train", accum=8),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def shape_runnable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §3)."""
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("pure full-attention arch: long_500k skipped "
+                       "(DESIGN.md §3)")
+    return True, ""
+
+
+def _bspec(mesh):
+    bs = tuple(a for a in mdl.BATCH_AXES if a in mesh.axis_names
+               and mesh.shape[a] > 1)
+    return bs if len(bs) > 1 else (bs[0] if bs else None)
+
+
+def _batch_shardable(mesh, batch):
+    n = 1
+    for a in mdl.BATCH_AXES:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return batch % n == 0 and n > 1
+
+
+def batch_structs(cfg: ArchConfig, seq: int, batch: int, *, train: bool):
+    """Token batch (+ modality stubs) as ShapeDtypeStructs."""
+    s_text = seq - cfg.vision_prefix if cfg.vision_prefix else seq
+    out: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32)}
+    if train:
+        out["targets"] = jax.ShapeDtypeStruct((batch, s_text), jnp.int32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((batch, s_text),
+                                                jnp.float32)
+    if cfg.vision_prefix:
+        out["vision_embed"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers > 0:
+        enc_len = max(seq // max(cfg.audio_stride, 1), 8)
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, enc_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_shardings(cfg, structs, mesh):
+    bspec = _bspec(mesh)
+    out = {}
+    for k, v in structs.items():
+        spec = P(bspec, *([None] * (len(v.shape) - 1)))
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+# ---------------------------------------------------------------- steps
+
+def make_train_step(cfg: ArchConfig, mesh, opt_cfg=None, accum_steps=1):
+    """Train step with gradient-accumulation microbatching.
+
+    accum_steps > 1 scans over microbatches accumulating f32 grads; peak
+    activation memory scales 1/accum (the §Perf memory lever for the 1M-
+    token train_4k shape).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def grad_fn(params, mb):
+        return jax.value_and_grad(mdl.loss_fn, has_aux=True)(
+            params, mb, cfg, mesh)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((accum_steps, a.shape[0] // accum_steps)
+                                    + a.shape[1:]), batch)
+
+            def body(carry, mb):
+                gsum, lsum, asum = carry
+                (_, m), g = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + m["loss"], asum + m["aux_loss"]), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum, asum), _ = jax.lax.scan(
+                body, (gzero, jnp.zeros(()), jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = lsum / accum_steps
+            metrics = {"loss": loss, "aux_loss": asum / accum_steps,
+                       "perplexity": jnp.exp(jnp.clip(loss, max=20.0))}
+        params, opt_state, opt_metrics = adamw.apply(
+            opt_cfg, params, opt_state, grads)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh):
+    """Prefill returns ONLY the last position's logits (what serving needs
+    to start decoding) — materializing (B, 32k, 150k-vocab) logits would
+    be a pointless multi-GB buffer (§Perf, iteration 1)."""
+
+    def prefill_step(params, batch):
+        x, _ = mdl.forward_hidden(params, batch, cfg, mesh)
+        cd = jnp.dtype(cfg.compute_dtype)
+        last = x[:, -1:]
+        logits = jnp.einsum("bsd,dv->bsv", last.astype(cd),
+                            params["lm_head"].astype(cd))
+        return logits.astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh, batch_shardable: bool):
+    def serve_step(params, caches, tokens, step):
+        logits, caches = mdl.decode_forward(
+            params, caches, tokens, step, cfg, mesh,
+            batch_shardable=batch_shardable)
+        return logits, caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------- dry-run
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything jit().lower() needs for one (arch x shape x mesh) cell."""
+    fn: Any
+    args: tuple                  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    n_params: int
+    kind: str
+
+
+def lowering_spec(cfg: ArchConfig, shape_name: str, mesh,
+                  include_opt: bool = True) -> LoweringSpec:
+    info = SHAPE_TABLE[shape_name]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    plan = ShardingPlan(mesh)
+    defs = mdl.model_defs(cfg)
+    p_structs = param_structs(defs)
+    p_shard = param_shardings(defs, plan)
+    n_params = count_params(defs)
+
+    if kind == "train":
+        bs = batch_structs(cfg, seq, batch, train=True)
+        bshard = batch_shardings(cfg, bs, mesh)
+        opt_structs = {"m": p_structs, "v": p_structs,
+                       "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_shard = {"m": p_shard, "v": p_shard,
+                     "step": NamedSharding(mesh, P())}
+        accum = cfg.accum_steps or info.get("accum", 1)
+        # microbatches must still shard over the batch axes (pod x data)
+        ways = 1
+        for a in mdl.BATCH_AXES:
+            if a in mesh.axis_names:
+                ways *= mesh.shape[a]
+        max_accum = max(batch // ways, 1) if batch % ways == 0 else batch
+        accum = min(accum, max_accum, batch)
+        while batch % accum:
+            accum -= 1
+        fn = make_train_step(cfg, mesh, accum_steps=accum)
+        return LoweringSpec(
+            fn=fn, args=(p_structs, opt_structs, bs),
+            in_shardings=(p_shard, opt_shard, bshard),
+            out_shardings=(p_shard, opt_shard,
+                           jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                        _metric_tree())),
+            donate_argnums=(0, 1), n_params=n_params, kind=kind)
+
+    if kind == "prefill":
+        bs = batch_structs(cfg, seq, batch, train=False)
+        bshard = batch_shardings(cfg, bs, mesh)
+        fn = make_prefill_step(cfg, mesh)
+        bspec = _bspec(mesh)
+        out_sh = NamedSharding(mesh, P(bspec, None, None))
+        return LoweringSpec(
+            fn=fn, args=(p_structs, bs), in_shardings=(p_shard, bshard),
+            out_shardings=out_sh, donate_argnums=(), n_params=n_params,
+            kind=kind)
+
+    # decode — inference sharding (§Perf, decode iteration 1):
+    # bf16 weights; when bf16-params / TP-degree fit the HBM budget,
+    # drop the FSDP axes entirely (pure TP) so NO weight gathers happen
+    # per decoded token.  Archs too large for that (qwen3-235b,
+    # qwen1.5-110b) keep ZeRO sharding + per-step gathers (the honest
+    # cost; production answer is pipeline stages, see DESIGN.md).
+    from repro.parallel.sharding import INFERENCE_RULES
+    tp = mesh.shape["model"]
+    fits_tp = n_params * 2 / tp <= 8e9
+    if fits_tp:
+        cfg = cfg.replace(fsdp_weights=False)
+        plan = ShardingPlan(mesh, rules=INFERENCE_RULES)
+    p_structs = param_structs(defs, dtype=jnp.bfloat16)
+    p_shard = param_shardings(defs, plan)
+    shardable = _batch_shardable(mesh, batch)
+    cache_structs = mdl.init_caches(cfg, batch, seq, abstract=True)
+    cspec = mdl.cache_specs(cfg, batch, seq, mesh, shardable)
+    cshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), cspec,
+                          is_leaf=lambda x: isinstance(x, P))
+    bspec = _bspec(mesh) if shardable else None
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, P(bspec, None))
+    step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    step_shard = NamedSharding(mesh, P())
+    fn = make_serve_step(cfg, mesh, shardable)
+    logits_shard = NamedSharding(mesh, P(bspec, None, None))
+    return LoweringSpec(
+        fn=fn, args=(p_structs, cache_structs, tok, step_struct),
+        in_shardings=(p_shard, cshard, tok_shard, step_shard),
+        out_shardings=(logits_shard, cshard),
+        donate_argnums=(1,), n_params=n_params, kind=kind)
+
+
+def _metric_tree():
+    return {"loss": 0.0, "aux_loss": 0.0, "perplexity": 0.0,
+            "grad_norm": 0.0, "lr": 0.0}
+
+
+def lower_cell(cfg: ArchConfig, shape_name: str, mesh):
+    spec = lowering_spec(cfg, shape_name, mesh)
+    jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                     out_shardings=spec.out_shardings,
+                     donate_argnums=spec.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*spec.args)
+    return lowered, spec
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh=None):
+    """ShapeDtypeStruct stand-ins for every input of the cell's step —
+    weak-type-correct, shardable, no device allocation (the multi-pod
+    dry-run contract).  Returns the positional arg tuple for the step
+    returned by ``lowering_spec(...).fn``."""
+    from repro.launch.mesh import single_device_mesh
+    mesh = mesh or single_device_mesh()
+    return lowering_spec(cfg, shape_name, mesh).args

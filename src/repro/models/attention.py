@@ -1,0 +1,177 @@
+"""Attention: GQA with causal / bidirectional / sliding-window variants.
+
+All paths are memory-safe under GSPMD (no full S x S score tensor for long
+sequences):
+
+- ``chunked_attention``  — online-softmax scan over KV chunks (flash-style
+  in XLA); used for full-attention train/prefill.  Upper-triangle blocks
+  are masked, not skipped (XLA counts their FLOPs — the Pallas kernel in
+  kernels/flash_attention.py skips them on real hardware; the roofline
+  table reports the MODEL_FLOPS/HLO_FLOPs ratio this costs).
+- ``swa_attention``      — banded 2-chunk gather for sliding-window; FLOPs
+  ~= 2*W per query instead of S.
+- ``decode_attention``   — single-query dense attention against a KV cache
+  (optionally length-masked); the distributed split-KV variant lives in
+  core/collectives.py (Gleam many-to-one combine).
+
+Shapes: q (B, Sq, H, hd); k, v (B, Skv, KVH, hd); H = KVH * rep (GQA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def dense_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Reference O(S^2)-memory attention. Small seqs / oracle only."""
+    b, sq, h, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    qg = _split_gqa(q, n_kv)                              # b sq kv rep d
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+def chunked_attention(q, k, v, *, causal=True, kv_chunk=1024, q_offset=0):
+    """Online-softmax scan over KV chunks; full (or causal) attention.
+    q_offset: global position of q[0] (sequence-parallel shards)."""
+    b, sq, h, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    if skv % kv_chunk != 0:
+        kv_chunk = skv  # degenerate: single chunk
+    n_chunks = skv // kv_chunk
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kc = k.reshape(b, n_chunks, kv_chunk, n_kv, d)
+    vc = v.reshape(b, n_chunks, kv_chunk, n_kv, d)
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, kb.astype(jnp.float32))
+        logits = logits * scale
+        if causal:
+            kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkrqs,bskd->bkrqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    rep = h // n_kv
+    m0 = jnp.full((b, n_kv, rep, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, n_kv, rep, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def swa_attention(q, k, v, *, window):
+    """Sliding-window attention via banded 2-chunk gather (chunk == window).
+
+    Each query chunk i attends exactly chunks [i-1, i] of KV, masked to the
+    causal window.  FLOPs ~ 2*W per query (vs S for full attention).
+    """
+    b, s, h, d = q.shape
+    n_kv = k.shape[2]
+    assert s % window == 0, (s, window)
+    nc = s // window
+    qg = _split_gqa(q, n_kv).reshape(b, nc, window, n_kv, h // n_kv, d)
+    kc = k.reshape(b, nc, window, n_kv, d)
+    vc = v.reshape(b, nc, window, n_kv, d)
+    # previous chunk (zeros before chunk 0)
+    kp = jnp.pad(kc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(vc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    kband = jnp.concatenate([kp, kc], axis=2)             # b nc 2W kv d
+    vband = jnp.concatenate([vp, vc], axis=2)
+    logits = jnp.einsum("bcqkrd,bcskd->bckrqs", qg.astype(jnp.float32),
+                        kband.astype(jnp.float32)) / jnp.sqrt(d)
+    tq = jnp.arange(window)                               # in-chunk q pos
+    ts = jnp.arange(2 * window) - window                  # band pos rel. chunk
+    mask = (ts[None, :] <= tq[:, None]) & (ts[None, :] > tq[:, None] - window)
+    first = jnp.arange(2 * window) >= window              # chunk 0: no prev
+    mask0 = mask & first[None, :]
+    ci = jnp.arange(nc)
+    m = jnp.where((ci == 0)[:, None, None], mask0[None], mask[None])
+    logits = jnp.where(m[None, :, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckrqs,bcskd->bcqkrd", w, vband.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, kv_len=None, window=0):
+    """Single-query attention against a (possibly partially filled) cache.
+
+    q: (B, 1, H, hd); k, v: (B, S_cache, KVH, hd).
+    kv_len: (B,) int32 — number of valid cache entries (<= S_cache).
+    """
+    b, sq, h, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    kpos = jnp.arange(skv)
+    if kv_len is not None:
+        valid = kpos[None, :] < kv_len[:, None]           # (B, S)
+        if window:
+            valid &= kpos[None, :] >= kv_len[:, None] - window
+        logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def cross_attention(q, mem_k, mem_v):
+    """Dense bidirectional cross-attention (decoder -> encoder memory)."""
+    b, sq, h, d = q.shape
+    n_kv = mem_k.shape[2]
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg,
+                        mem_k.astype(jnp.float32)) / jnp.sqrt(d)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w, mem_v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, kv_chunk=1024,
+              q_offset=None):
+    """Dispatch to the right implementation for train/prefill shapes.
+    q_offset not None forces the chunked path with global q positions
+    (the sequence-parallel fallback)."""
+    s = q.shape[1]
+    if q_offset is not None:
+        if window:
+            return dense_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+        return chunked_attention(q, k, v, causal=causal,
+                                 kv_chunk=kv_chunk, q_offset=q_offset)
+    if window and causal and s > window and s % window == 0:
+        return swa_attention(q, k, v, window=window)
+    if s <= 2 * kv_chunk:
+        return dense_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, kv_chunk=kv_chunk)

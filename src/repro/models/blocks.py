@@ -1,0 +1,139 @@
+"""Parameter machinery + elementwise blocks (norms, MLP, embeddings, RoPE).
+
+Parameters are described abstractly by ``ParamDef(shape, axes)`` pytrees;
+``init_params`` materializes them, ``param_shardings`` resolves them against
+a ``ShardingPlan``, ``param_structs`` produces ShapeDtypeStructs for
+allocation-free lowering (the multi-pod dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                    # logical axis names, len == len(shape)
+    init: str = "normal"           # normal | zeros | ones | small
+    scale: float | None = None     # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+            out.append((jax.random.normal(k, d.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_structs(defs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def param_shardings(defs, plan: ShardingPlan):
+    return jax.tree.map(
+        lambda d: plan.sharding(d.axes, d.shape), defs, is_leaf=is_def)
+
+
+def param_specs(defs, plan: ShardingPlan):
+    return jax.tree.map(
+        lambda d: plan.spec(d.axes, d.shape), defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+# ---------------------------------------------------------------- blocks
+
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, wi, wg, wo, compute_dtype):
+    """SwiGLU MLP: silu(x@wg) * (x@wi) @ wo."""
+    cd = compute_dtype
+    h = jax.nn.silu(x.astype(cd) @ wg.astype(cd)) * (x.astype(cd) @ wi.astype(cd))
+    return h @ wo.astype(cd)
+
+
+def mlp_defs(d_model, d_ff):
+    return {
+        "wi": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "wg": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def stack_defs(defs, n: int):
+    """Prepend a (n, "layers") scan dimension to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes,
+                           d.init, d.scale),
+        defs, is_leaf=is_def)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding over the last dim (rotate-half convention).
+
+    x: (..., seq, heads..., head_dim); positions: (..., seq) int32.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    # broadcast over head dims between seq and head_dim
+    extra = x.ndim - positions.ndim - 1
+    ang = ang.reshape(ang.shape[:-1] + (1,) * extra + (half,))
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if hd > 2 * half:  # odd head_dim (danube's 120 stays even; guard anyway)
+        rot = jnp.concatenate([rot, x[..., 2 * half:]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def sinusoidal_at(positions, d_model):
+    """Sinusoidal absolute position encoding at arbitrary positions.
+
+    positions: (...,) int -> (..., d_model) float32.
+    """
+    pos = positions.astype(jnp.float32)[..., None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d_model))
+    pe = jnp.zeros(positions.shape + (d_model,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[..., 1::2].set(jnp.cos(pos * div[: (d_model + 1) // 2]))
+    return pe
+
+
+def sinusoidal_positions(seq_len, d_model):
+    return sinusoidal_at(jnp.arange(seq_len), d_model)

@@ -1,0 +1,158 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: intra-chunk quadratic attention-like term + inter-chunk state
+recurrence carried by lax.scan.  Tensor-parallel friendly: heads/d_inner
+shard over "model", B/C projections are per-group (G=1) and replicated, so
+the whole scan is collective-free; only the out-projection psums.
+
+The pure-jnp oracle for the Pallas ssd_scan kernel reuses ``ssd_chunked``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import ParamDef, rms_norm
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_headdim
+    return d_in, n_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+
+
+def ssm_defs(cfg):
+    d = cfg.d_model
+    d_in, h, p, n, k = ssm_dims(cfg)
+    return {
+        "wz": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, n), ("embed", None)),
+        "wC": ParamDef((d, n), ("embed", None)),
+        "wdt": ParamDef((d, h), ("embed", "ssm_heads")),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "D": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "conv_x": ParamDef((k, d_in), ("conv_k", "ssm_inner"), scale=0.5),
+        "conv_B": ParamDef((k, n), ("conv_k", None), scale=0.5),
+        "conv_C": ParamDef((k, n), ("conv_k", None), scale=0.5),
+        "gnorm": ParamDef((d_in,), ("ssm_inner",), init="ones"),
+        "wo": ParamDef((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def ssd_chunked(x, dt, a, B_, C_, chunk):
+    """SSD scan. x (B,S,H,P); dt,a (B,S,H); B_,C_ (B,S,N). Returns y, final
+    state (B,H,N,P).  All f32 internally."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    ac = a.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B_.reshape(b, nc, chunk, n).astype(f32)
+    Cc = C_.reshape(b, nc, chunk, n).astype(f32)
+    xdt = xc * dtc[..., None]
+    cum = jnp.cumsum(ac, axis=2)                          # (b,nc,q,h)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j), i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,q,k,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, L, xdt)
+    # per-chunk final states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,q,h)
+    chunk_states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, decay_states * dtc,
+                              xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (b,nc,h)
+
+    def step(S, inp):
+        cs, cd = inp                                       # (b,h,n,p),(b,h)
+        S_new = S * cd[..., None, None] + cs
+        return S_new, S                                    # emit state BEFORE
+
+    S0 = jnp.zeros((b, h, n, p), f32)
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    S_prevs = S_prevs.swapaxes(0, 1)                       # (b,nc,h,n,p)
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, S_prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, S_final
+
+
+def ssm_apply(p, x, cfg, *, chunk=256):
+    """Full-sequence Mamba-2 block. x (B,S,D) -> (y (B,S,D), state)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    d_in, h, hp, n, k = ssm_dims(cfg)
+    xc = x.astype(cd)
+    z = xc @ p["wz"].astype(cd)
+    xin = xc @ p["wx"].astype(cd)
+    B_ = xc @ p["wB"].astype(cd)
+    C_ = xc @ p["wC"].astype(cd)
+    dt_raw = xc @ p["wdt"].astype(cd)
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"].astype(cd)))
+    B_ = jax.nn.silu(_causal_conv(B_, p["conv_B"].astype(cd)))
+    C_ = jax.nn.silu(_causal_conv(C_, p["conv_C"].astype(cd)))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt     # (B,S,H)
+    xh = xin.reshape(*xin.shape[:2], h, hp)
+    y, state = ssd_chunked(xh, dt, a, B_, C_, chunk)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_in)
+    y = rms_norm(y.astype(cd) * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    return y @ p["wo"].astype(cd), state
+
+
+def ssm_decode_init(cfg, batch, dtype=jnp.float32):
+    d_in, h, p, n, k = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, k - 1, d_in + 2 * n), dtype),
+        "state": jnp.zeros((batch, h, n, p), jnp.float32),
+    }
+
+
+def ssm_decode_step(p, x, cache, cfg):
+    """Single-token step. x (B,1,D) -> (y (B,1,D), new cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    d_in, h, hp, n, k = ssm_dims(cfg)
+    xt = x[:, 0].astype(cd)                               # (B,D)
+    z = xt @ p["wz"].astype(cd)
+    xin = xt @ p["wx"].astype(cd)
+    B_ = xt @ p["wB"].astype(cd)
+    C_ = xt @ p["wC"].astype(cd)
+    dt_raw = xt @ p["wdt"].astype(cd)
+    xbc = jnp.concatenate([xin, B_, C_], axis=-1)          # (B, d_in+2n)
+    conv_w = jnp.concatenate(
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=1).astype(cd)  # (K, ..)
+    window = jnp.concatenate([cache["conv"].astype(cd), xbc[:, None]], 1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[:, :d_in]
+    B_ = conv_out[:, d_in:d_in + n]
+    C_ = conv_out[:, d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt
+    xh = xin.reshape(-1, h, hp).astype(jnp.float32)
+    S = cache["state"] * jnp.exp(a)[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", B_.astype(jnp.float32), dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), S)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(-1, d_in)
+    y = rms_norm(y.astype(cd) * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = (y @ p["wo"].astype(cd))[:, None]
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                 "state": S}
+    return out, new_cache

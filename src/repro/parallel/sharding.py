@@ -1,0 +1,151 @@
+"""Logical-axis sharding planner.
+
+Every parameter / activation in the framework is annotated with *logical*
+axis names (e.g. ``("embed", "heads", "head_dim")``).  The planner maps the
+logical names onto physical mesh axes using a rules table with a
+divisibility-checked fallback chain: if the preferred mesh axis does not
+evenly divide the dimension (e.g. llama3.2's 24 heads on a 16-way model
+axis), the next logical axis of the tensor gets a chance to absorb the mesh
+axis instead (heads -> head_dim -> replicate).
+
+This mirrors the Gleam control plane: the *registration* step decides, per
+group member (tensor), how traffic (data) is addressed on the fabric (mesh)
+-- one logical value, per-device physical addressing (DESIGN.md 2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> ordered candidate mesh-axis tuples.  Each candidate is a
+# tuple of mesh axes (a logical dim may be sharded by several mesh axes at
+# once, e.g. batch over (pod, data)).  First candidate whose axes are all
+# free in this tensor and whose product divides the dim wins.
+DEFAULT_RULES: dict[str, Sequence[Sequence[str]]] = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": ((),),                       # replicated by default
+    "kv_seq": (("pod", "data"), ("data",),),  # long-context KV sharding
+    "act_embed": ((),),
+    "act_heads": (("model",),),
+    "act_kv_heads": (("model",),),
+    "act_head_dim": (("model",),),      # fallback when heads don't divide
+    "act_mlp": (("model",),),
+    "act_experts": (("model",),),
+    "act_vocab": (("model",),),
+    # weights -- "model" tensor parallelism + FSDP over (pod, data)
+    "vocab": (("model",),),
+    # embedding-table vocab dim: sharded over the FSDP axes (NOT model) so
+    # the token gather lowers to mask+psum instead of involuntary full
+    # rematerialization (GSPMD warning b/433785288); odd vocabs fall back
+    # to replicated, which is small enough for every assigned arch.
+    "vocab_table": (("pod", "data"), ("data",)),
+    "embed_table": ((),),       # feature dim of the embed table: replicated
+    "embed": (("pod", "data"), ("data",)),   # FSDP / ZeRO-3 axis
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (("model",),),
+    "mlp": (("model",),),
+    "experts": (("model",),),
+    "ssm_inner": (("model",),),
+    "ssm_heads": (("model",),),
+    "ssm_state": ((),),
+    "conv_k": ((),),
+    "norm": ((),),
+    "layers": ((),),                    # stacked scan-over-layers dim
+    None: ((),),
+}
+
+# Tensors whose *first* matching logical axis failed divisibility let the
+# mesh axis fall through to a later logical axis in the same tensor.  The
+# order below defines which logical axes compete for the same mesh axis.
+# Inference plan: weights replicated across the batch axes (pure TP) —
+# no per-step ZeRO-3 regathers on the decode path (§Perf, decode iter 1).
+# Used when bf16 params / model-axis-size fit the HBM budget.
+INFERENCE_RULES = dict(DEFAULT_RULES)
+INFERENCE_RULES.update({
+    "embed": ((),),                 # weight embed dims: replicated
+    "vocab_table": (("data",),),    # token table may stay vocab-sharded
+})
+
+_MODEL_AXIS_PRIORITY = (
+    "experts", "heads", "kv_heads", "mlp", "vocab", "ssm_heads",
+    "ssm_inner", "head_dim", "act_experts", "act_heads", "act_kv_heads",
+    "act_mlp", "act_vocab", "act_head_dim",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Resolved sharding rules for one mesh (+ optional per-run overrides)."""
+
+    mesh: Mesh
+    rules: Mapping[str, Sequence[Sequence[str]]] = dataclasses.field(
+        default_factory=lambda: DEFAULT_RULES)
+
+    def _mesh_size(self, axes: Sequence[str]) -> int:
+        n = 1
+        for a in axes:
+            n *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+        return n
+
+    def spec(self, logical_axes: Sequence[str | None],
+             shape: Sequence[int] | None = None) -> P:
+        """Resolve logical axes -> PartitionSpec with divisibility fallback."""
+        used: set[str] = set()
+        out: list[tuple[str, ...] | None] = []
+        for i, name in enumerate(logical_axes):
+            dim = None if shape is None else shape[i]
+            cands = self.rules.get(name, self.rules.get(None, ((),)))
+            placed: tuple[str, ...] | None = None
+            for cand in cands:
+                cand = tuple(a for a in cand if a in self.mesh.axis_names)
+                if not cand:
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                if dim is not None and dim % self._mesh_size(cand) != 0:
+                    continue
+                placed = cand
+                break
+            if placed:
+                used.update(placed)
+                out.append(placed if len(placed) > 1 else placed)
+            else:
+                out.append(None)
+        # Normalize: single-axis tuples -> str, for readable specs.
+        norm = [
+            (p[0] if (p is not None and len(p) == 1) else p) for p in out
+        ]
+        while norm and norm[-1] is None:
+            norm.pop()
+        return P(*norm)
+
+    def sharding(self, logical_axes: Sequence[str | None],
+                 shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def tree_shardings(self, spec_tree, shape_tree):
+        """Map matching pytrees of logical-axes tuples and shapes ->
+        NamedShardings."""
+        return jax.tree.map(
+            lambda ax, sds: self.sharding(ax, sds.shape),
+            spec_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+
+
+def with_overrides(plan: ShardingPlan, **overrides) -> ShardingPlan:
+    """Return a new plan with some logical-axis rules replaced.
+
+    ``overrides`` maps logical axis name -> candidate tuple sequence, e.g.
+    ``with_overrides(plan, embed=((),))`` disables FSDP.
+    """
+    rules = dict(plan.rules)
+    for k, v in overrides.items():
+        rules[k] = v
+    return ShardingPlan(plan.mesh, rules)

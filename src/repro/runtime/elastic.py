@@ -1,0 +1,69 @@
+"""Elastic scaling: re-mesh a running job onto a different device set.
+
+The Gleam mapping (DESIGN.md §2.2): group membership change = envelope
+re-registration (Appendix A).  Losing a pod (N -> N-1) or gaining one is
+a control-plane event; the data plane (the jitted step) is rebuilt against
+the new mesh while the *logical* state is untouched:
+
+    1. snapshot logical state (full arrays — CheckpointManager layout);
+    2. build the new mesh + sharding plan (re-registration);
+    3. device_put every leaf with its new NamedSharding;
+    4. re-jit the step functions for the new mesh.
+
+``remesh_tree`` is the core primitive; ``ElasticGroup`` wraps the
+registry bookkeeping (who is in the group, which registration epoch).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.models.blocks import param_shardings
+from repro.parallel.sharding import ShardingPlan
+
+
+def remesh_tree(tree, defs, new_mesh):
+    """Reshard a param-shaped pytree onto `new_mesh` (elastic restore)."""
+    plan = ShardingPlan(new_mesh)
+    shardings = param_shardings(defs, plan)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a), s), tree, shardings)
+
+
+@dataclasses.dataclass
+class Member:
+    name: str
+    healthy: bool = True
+
+
+class ElasticGroup:
+    """Membership registry for one logical training/serving group.
+
+    Mirrors the paper's centralized registration: a master (this object)
+    collects member states, assigns the epoch, and every re-registration
+    bumps it — stale members (old epoch) are fenced out, the analogue of
+    PSN resync on source switching (Appendix B)."""
+
+    def __init__(self, members):
+        self.members = {m: Member(m) for m in members}
+        self.epoch = 0
+        self.log: list = []
+
+    def active(self):
+        return [m.name for m in self.members.values() if m.healthy]
+
+    def fail(self, name: str):
+        self.members[name].healthy = False
+        self.epoch += 1
+        self.log.append(("fail", name, self.epoch))
+
+    def join(self, name: str):
+        self.members[name] = Member(name)
+        self.epoch += 1
+        self.log.append(("join", name, self.epoch))
+
+    def is_current(self, epoch: int) -> bool:
+        """Fencing: actions from older epochs are rejected."""
+        return epoch == self.epoch

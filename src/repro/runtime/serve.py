@@ -1,0 +1,136 @@
+"""Batched serving runtime with continuous batching.
+
+The server owns a fixed pool of B cache slots (the decode batch).  Each
+request occupies one slot; prefill feeds prompt tokens through the decode
+path at the slot's own position (per-row positions — cache_insert /
+decode_attn_core accept a (B,) step vector on single-shard-KV meshes).
+Slots complete independently (EOS or max_new_tokens) and are immediately
+recycled for queued requests — iteration-level (continuous) batching.
+
+This is the storage-replication analogue's serving side: one shared
+jitted step serves the whole pool; admission is the only Python-side
+logic.  On multi-device meshes with sharded KV the pool decodes with a
+synchronized position (documented limitation — per-row insert into a
+sequence-sharded cache needs a scatter collective the Gleam layer does
+not model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as mdl
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never stops early
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServerStats:
+    admitted: int = 0
+    completed: int = 0
+    steps: int = 0
+    tokens_generated: int = 0
+
+
+class Server:
+    def __init__(self, cfg: ArchConfig, params, mesh, *, pool: int = 4,
+                 max_seq: int = 256,
+                 sampler: Optional[Callable] = None):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.pool = pool
+        self.max_seq = max_seq
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.caches = mdl.init_caches(cfg, pool, max_seq)
+        self.pos = np.zeros(pool, np.int32)          # next cache slot/row
+        self.active: list[Optional[Request]] = [None] * pool
+        self.queue: deque[Request] = deque()
+        self.stats = ServerStats()
+        self._rid = 0
+        self._pending: list[list[int]] = [[] for _ in range(pool)]
+
+        def step_fn(params, caches, tokens, pos):
+            return mdl.decode_forward(params, caches, tokens, pos, cfg,
+                                      mesh, batch_shardable=False)
+
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+
+    # ---------------------------------------------------------- admission
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: int = -1) -> Request:
+        r = Request(self._rid, np.asarray(prompt, np.int32),
+                    max_new_tokens, eos_id)
+        self._rid += 1
+        self.queue.append(r)
+        return r
+
+    def _admit(self):
+        for slot in range(self.pool):
+            if self.active[slot] is None and self.queue:
+                r = self.queue.popleft()
+                self.active[slot] = r
+                self.pos[slot] = 0
+                self._pending[slot] = list(r.prompt)
+                self.stats.admitted += 1
+
+    # ------------------------------------------------------------- step
+
+    def step(self) -> bool:
+        """One pool-wide decode step. Returns True if any work was done."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        tokens = np.zeros((self.pool, 1), np.int32)
+        for slot, r in enumerate(self.active):
+            if r is None:
+                continue
+            if self._pending[slot]:
+                tokens[slot, 0] = self._pending[slot][0]
+            else:
+                tokens[slot, 0] = r.out_tokens[-1]
+        with self.mesh:
+            logits, self.caches = self._step(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(self.pos))
+        nxt = np.asarray(self.sampler(logits[:, 0, :]))
+        self.stats.steps += 1
+        for slot, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.pos[slot] += 1
+            if self._pending[slot]:
+                self._pending[slot].pop(0)
+                if self._pending[slot]:
+                    continue                      # still prefilling
+            # generating: the model's next-token prediction
+            r.out_tokens.append(int(nxt[slot]))
+            self.stats.tokens_generated += 1
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or r.out_tokens[-1] == r.eos_id
+                    or self.pos[slot] >= self.max_seq - 1):
+                r.done = True
+                self.stats.completed += 1
+                self.active[slot] = None          # recycle the slot
+        return True
+
+    def run_until_drained(self, max_steps: int = 10_000) -> ServerStats:
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        return self.stats

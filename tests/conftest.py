@@ -1,0 +1,36 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the single real
+CPU device; multi-device behaviour is tested via subprocesses (see
+tests/distributed_driver.py) so device count stays per-process."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    from repro.launch.mesh import single_device_mesh
+    return single_device_mesh()
+
+
+def run_devices(py_src: str, n_devices: int = 8, timeout: int = 900):
+    """Run a python snippet in a subprocess with n host devices.
+
+    The snippet should raise / assert on failure.  Returns stdout.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", py_src], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n--- stdout\n"
+            f"{proc.stdout[-4000:]}\n--- stderr\n{proc.stderr[-4000:]}")
+    return proc.stdout

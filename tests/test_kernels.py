@@ -1,0 +1,199 @@
+"""Pallas kernel correctness: interpret=True vs pure-jnp oracles.
+
+Per instructions: sweep shapes/dtypes for each kernel and assert_allclose
+against the ref.py oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ============================================================ flash attn
+
+ATTN_CASES = [
+    # (B, Sq, Skv, H, KVH, D, causal, window)
+    (1, 128, 128, 4, 4, 64, True, 0),          # MHA causal
+    (2, 256, 256, 8, 2, 64, True, 0),          # GQA causal
+    (1, 128, 128, 4, 2, 32, False, 0),         # bidirectional (encoder)
+    (2, 256, 256, 4, 4, 64, True, 128),        # sliding window == block
+    (1, 384, 384, 4, 2, 64, True, 96),         # window not block-aligned
+    (1, 192, 192, 2, 1, 16, True, 0),          # ragged seq (pad path)
+    (1, 100, 100, 2, 2, 64, True, 0),          # non-multiple-of-block
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    b, sq, skv, h, kvh, d, causal, window = case
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (b, sq, h, d), dtype)
+    k = rand(k2, (b, skv, kvh, d), dtype)
+    v = rand(k3, (b, skv, kvh, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_block_shape_sweep():
+    """Block shape must not change the result (VMEM tiling invariance)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (1, 256, 4, 64), jnp.float32)
+    k = rand(k2, (1, 256, 2, 64), jnp.float32)
+    v = rand(k3, (1, 256, 2, 64), jnp.float32)
+    want = ref.mha_reference(q, k, v, causal=True, window=0)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256), (128, 128)]:
+        got = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ============================================================ flash decode
+
+DECODE_CASES = [
+    # (B, S, H, KVH, D, kv_lens)
+    (1, 512, 4, 4, 64, [512]),
+    (2, 1024, 8, 2, 64, [1000, 37]),           # ragged fills
+    (2, 512, 4, 1, 32, [1, 512]),              # single-token prefix
+    (1, 768, 2, 2, 128, [600]),                # 1.5 blocks valid
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_oracle(case, dtype):
+    b, s, h, kvh, d, kv_lens = case
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (b, h, d), dtype)
+    k = rand(k2, (b, s, kvh, d), dtype)
+    v = rand(k3, (b, s, kvh, d), dtype)
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    got, m, l = ops.flash_decode(q, k, v, kv_len, block_k=512,
+                                 interpret=True)
+    want = ref.decode_reference(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+    # statistics invariants: l > 0, m finite, acc = out * l recombines
+    assert bool((np.asarray(l) > 0).all())
+    assert bool(np.isfinite(np.asarray(m)).all())
+
+
+def test_flash_decode_split_merge_equals_full():
+    """Split the KV across two 'shards', run the kernel per shard, merge
+    the (m, l, acc) partials with the Gleam combine — must equal the
+    single-shard result.  This is the kernel-level proof that the decode
+    path composes with core/collectives.softmax_combine."""
+    b, s, h, kvh, d = 2, 1024, 4, 2, 64
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (b, h, d), jnp.float32)
+    k = rand(k2, (b, s, kvh, d), jnp.float32)
+    v = rand(k3, (b, s, kvh, d), jnp.float32)
+    kv_len = jnp.asarray([s, s], jnp.int32)
+    full, _, _ = ops.flash_decode(q, k, v, kv_len, interpret=True)
+    half = s // 2
+    o1, m1, l1 = ops.flash_decode(q, k[:, :half], v[:, :half],
+                                  jnp.asarray([half, half], jnp.int32),
+                                  interpret=True)
+    o2, m2, l2 = ops.flash_decode(q, k[:, half:], v[:, half:],
+                                  jnp.asarray([half, half], jnp.int32),
+                                  interpret=True)
+    # associative merge (acc = out * l)
+    m = jnp.maximum(m1, m2)
+    s1, s2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    l = l1 * s1 + l2 * s2
+    acc = (o1 * l1[..., None]) * s1[..., None] \
+        + (o2 * l2[..., None]) * s2[..., None]
+    merged = acc / l[..., None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ============================================================ ssd scan
+
+SSD_CASES = [
+    # (B, S, H, P, N, chunk)
+    (1, 256, 2, 64, 64, 128),
+    (2, 128, 4, 32, 64, 64),
+    (1, 384, 2, 64, 128, 128),
+    (1, 100, 2, 16, 32, 64),                    # ragged (pad path)
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_oracle(case, dtype):
+    b, s, h, p, n, chunk = case
+    keys = jax.random.split(KEY, 5)
+    x = rand(keys[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(rand(keys[1], (b, s, h), jnp.float32))
+    a = -jnp.abs(rand(keys[2], (b, s, h), jnp.float32)) * 0.1
+    B_ = rand(keys[3], (b, s, n), dtype)
+    C_ = rand(keys[4], (b, s, n), dtype)
+    y, S = ops.ssd_scan(x, dt, a, B_, C_, chunk=chunk, interpret=True)
+    y_ref, S_ref = ref.ssd_reference(x, dt, a, B_, C_)
+    t = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **t)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is a tiling choice — results must not depend on it."""
+    b, s, h, p, n = 1, 256, 2, 32, 64
+    keys = jax.random.split(KEY, 5)
+    x = rand(keys[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(rand(keys[1], (b, s, h), jnp.float32))
+    a = -jnp.abs(rand(keys[2], (b, s, h), jnp.float32)) * 0.1
+    B_ = rand(keys[3], (b, s, n), jnp.float32)
+    C_ = rand(keys[4], (b, s, n), jnp.float32)
+    y64, S64 = ops.ssd_scan(x, dt, a, B_, C_, chunk=64, interpret=True)
+    y128, S128 = ops.ssd_scan(x, dt, a, B_, C_, chunk=128, interpret=True)
+    y256, S256 = ops.ssd_scan(x, dt, a, B_, C_, chunk=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y128),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y128), np.asarray(y256),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S64), np.asarray(S256),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_model_chunked_impl():
+    """The pure-jnp ssd_chunked in models/ssm.py (used by the model) and
+    the Pallas kernel agree — kernel can be swapped in transparently."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 1, 256, 2, 32, 64
+    keys = jax.random.split(KEY, 5)
+    x = rand(keys[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(rand(keys[1], (b, s, h), jnp.float32))
+    a = -jnp.abs(rand(keys[2], (b, s, h), jnp.float32)) * 0.1
+    B_ = rand(keys[3], (b, s, n), jnp.float32)
+    C_ = rand(keys[4], (b, s, n), jnp.float32)
+    y_model, S_model = ssd_chunked(x, dt * 0 + dt, a, B_, C_, 64)
+    # model's ssd_chunked takes x scaled by dt inside; signature (x, dt, a)
+    y_kern, S_kern = ops.ssd_scan(x, dt, a, B_, C_, chunk=64,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_kern), np.asarray(S_model),
+                               rtol=1e-3, atol=1e-3)

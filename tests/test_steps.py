@@ -1,0 +1,177 @@
+"""Semantics of the performance machinery: every §Perf optimization must
+be a pure re-schedule — same math, different layout/loops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import steps
+from repro.launch.mesh import single_device_mesh
+from repro.models import model as mdl
+from repro.models.blocks import init_params, param_structs
+from repro.models.model import model_defs
+from repro.optim import adamw
+
+ARCH = "granite_3_2b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH, smoke=True).replace(n_layers=2,
+                                               compute_dtype="float32")
+    mesh = single_device_mesh()
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                               jnp.int32),
+        "loss_mask": jnp.ones((4, 32), jnp.float32),
+    }
+    return cfg, mesh, params, batch
+
+
+def naive_loss(params, batch, cfg, mesh):
+    """Reference: full-logits cross-entropy."""
+    x, aux = mdl.forward_hidden(params, batch, cfg, mesh)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None],
+                               -1)[..., 0]
+    nll = (logz - gold) * batch["loss_mask"]
+    return nll.sum() / batch["loss_mask"].sum()
+
+
+class TestChunkedXent:
+    def test_matches_full_logits_loss(self, setup):
+        cfg, mesh, params, batch = setup
+        with mesh:
+            (total, metrics) = mdl.loss_fn(params, batch, cfg, mesh)
+            want = naive_loss(params, batch, cfg, mesh)
+        np.testing.assert_allclose(float(metrics["loss"]), float(want),
+                                   rtol=1e-5)
+
+    def test_chunk_size_invariant(self, setup):
+        cfg, mesh, params, batch = setup
+        vals = []
+        for chunk in (8, 16, 32):
+            c = cfg.replace(xent_chunk=chunk)
+            with mesh:
+                _, m = mdl.loss_fn(params, batch, c, mesh)
+            vals.append(float(m["loss"]))
+        np.testing.assert_allclose(vals[0], vals[1], rtol=1e-6)
+        np.testing.assert_allclose(vals[0], vals[2], rtol=1e-6)
+
+    def test_gradients_match(self, setup):
+        cfg, mesh, params, batch = setup
+        with mesh:
+            g1 = jax.grad(lambda p: mdl.loss_fn(p, batch, cfg, mesh)[1]
+                          ["loss"])(params)
+            g2 = jax.grad(lambda p: naive_loss(p, batch, cfg, mesh))(params)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+
+
+class TestGradAccumulation:
+    def test_accum_equals_full_batch(self, setup):
+        cfg, mesh, params, batch = setup
+        opt = adamw.init(params)
+        s1 = steps.make_train_step(cfg, mesh, accum_steps=1)
+        s4 = steps.make_train_step(cfg, mesh, accum_steps=4)
+        with mesh:
+            p1, o1, m1 = jax.jit(s1)(params, opt, batch)
+            p4, o4, m4 = jax.jit(s4)(params, adamw.init(params), batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                                   rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+
+
+class TestPrefillStep:
+    def test_last_token_logits_match_forward(self, setup):
+        cfg, mesh, params, batch = setup
+        prefill = steps.make_prefill_step(cfg, mesh)
+        with mesh:
+            got = prefill(params, {"tokens": batch["tokens"]})
+            full, _ = mdl.forward(params, {"tokens": batch["tokens"]},
+                                  cfg, mesh)
+        np.testing.assert_allclose(np.asarray(got[:, 0]),
+                                   np.asarray(full[:, -1]), rtol=1e-4,
+                                   atol=1e-4)
+
+
+class TestLoweringSpecs:
+    @pytest.mark.parametrize("shape", list(steps.SHAPE_TABLE))
+    def test_smoke_cells_lower_on_tiny_mesh(self, shape):
+        """The dry-run machinery itself (specs, shardings, donation) is
+        exercised on a 1x1 mesh with smoke configs — no 512-device env
+        needed to validate the plumbing."""
+        cfg = get_config("mixtral_8x7b", smoke=True)
+        mesh = single_device_mesh()
+        ok, _ = steps.shape_runnable(cfg, shape)
+        if not ok:
+            pytest.skip("shape not runnable for this arch")
+        # shrink the shape table entry to smoke size
+        orig = steps.SHAPE_TABLE[shape]
+        small = dict(orig, seq=64, batch=4)
+        steps.SHAPE_TABLE[shape] = small
+        try:
+            lowered, spec = steps.lower_cell(cfg, shape, mesh)
+            assert lowered is not None
+            assert spec.n_params > 0
+        finally:
+            steps.SHAPE_TABLE[shape] = orig
+
+
+class TestShardingPlanner:
+    def test_divisibility_fallback(self):
+        from repro.parallel.sharding import ShardingPlan
+        import numpy as onp
+        from jax.sharding import Mesh
+        devs = onp.asarray(jax.devices()[:1]).reshape(1, 1)
+        mesh = Mesh(devs, ("data", "model"))
+        plan = ShardingPlan(mesh)
+        # heads=24 on model=1: trivially placed; logical resolution only
+        spec = plan.spec(("embed", "heads", None), (64, 24, 16))
+        assert spec is not None
+
+    def test_inference_rules_drop_fsdp(self):
+        from repro.parallel.sharding import (DEFAULT_RULES,
+                                             INFERENCE_RULES)
+        assert DEFAULT_RULES["embed"][0] == ("pod", "data")
+        assert INFERENCE_RULES["embed"] == ((),)
+
+
+class TestRooflineParsing:
+    def test_collective_bytes_parser(self):
+        from repro.launch.roofline import collective_bytes
+        hlo = """
+  %ag = bf16[16,128]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = f32[4,4]{1,0} all-reduce-start(%y), to_apply=%add
+  %ar.2 = f32[4,4]{1,0} all-reduce-done(%ar.1)
+  %cp = (f32[8]{0}, f32[8]{0}) collective-permute(%z, %w)
+  %dot = f32[2,2]{1,0} dot(%a, %b)
+"""
+        out = collective_bytes(hlo)
+        assert out["bytes"]["all-gather"] == 16 * 128 * 2
+        assert out["bytes"]["all-reduce"] == 4 * 4 * 4   # start only
+        assert out["bytes"]["collective-permute"] == 2 * 8 * 4
+        assert out["counts"]["all-gather"] == 1
+
+    def test_model_flops_moe_uses_active_params(self):
+        from repro.launch.roofline import model_flops
+        cfg = get_config("mixtral_8x7b")
+        dense_equiv = get_config("granite_3_2b")
+        info = dict(seq=128, batch=4, kind="train")
+        f_moe = model_flops(cfg, info, int(47e9), 16)
+        # active ~ 13/47 of total for mixtral top-2-of-8
+        assert f_moe < 6 * 47e9 * 512 / 16
+        assert f_moe > 6 * 47e9 * 512 / 16 * 0.2

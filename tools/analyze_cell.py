@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, collections
+sys.path.insert(0, "src")
+from repro.configs.base import get_config
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import _probe_cfg
+from repro.launch.roofline import _SHAPE_RE, _DTYPE_BYTES
+
+arch, shape, k = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cfg = get_config(arch)
+seq = steps.SHAPE_TABLE[shape]["seq"]
+if k > 0:
+    cfg = _probe_cfg(cfg, k, seq)
+mesh = make_production_mesh(multi_pod=False)
+lowered, _ = steps.lower_cell(cfg, shape, mesh)
+compiled = lowered.compile()
+txt = compiled.as_text()
+COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+def shape_bytes(ts):
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(ts):
+        if dt not in _DTYPE_BYTES: continue
+        n = 1
+        for d in dims.split(","):
+            if d: n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+rows = []
+for line in txt.splitlines():
+    line = line.strip()
+    m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", line)
+    if not m: continue
+    ts, op = m.group(1), m.group(2)
+    base = next((c for c in COLL if op == c or op.startswith(c + "-start")), None)
+    if base is None: continue
+    rows.append((shape_bytes(ts), base, line[:220]))
+rows.sort(reverse=True)
+tot = collections.Counter()
+for b, base, _ in rows: tot[base] += b
+print("TOTALS:", {k: f"{v/1e9:.2f}GB" for k, v in tot.items()})
+for b, base, line in rows[:25]:
+    print(f"{b/1e9:8.3f}GB {base:20s} {line}")

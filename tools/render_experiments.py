@@ -1,0 +1,90 @@
+"""Render the §Roofline tables into EXPERIMENTS.md at the
+<!-- ROOFLINE_TABLES --> marker, from results/dryrun (optimized) and
+results/dryrun_baseline (paper-faithful baseline).
+"""
+import io
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from roofline_table import ARCHS, SHAPES, fmt_t, load  # noqa: E402
+
+
+def table(cells, title):
+    out = io.StringIO()
+    print(f"#### {title}\n", file=out)
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+          "useful | frac | temp HBM |", file=out)
+    print("|---" * 9 + "|", file=out)
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = cells.get((arch, shape, "pod"))
+            if not c:
+                continue
+            if c["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | skipped "
+                      f"(full attention) | — | — | — |", file=out)
+                continue
+            if c["status"] != "ok":
+                print(f"| {arch} | {shape} | FAIL | | | | | | |",
+                      file=out)
+                continue
+            r = c["roofline"]
+            temp = (r["memory_stats"].get("temp_bytes") or 0) / 1e9
+            print(f"| {arch} | {shape} | {fmt_t(r['t_compute_s'])} | "
+                  f"{fmt_t(r['t_memory_s'])} | "
+                  f"{fmt_t(r['t_collective_s'])} | {r['bottleneck']} | "
+                  f"{r['useful_flops_ratio']:.2f} | "
+                  f"{r['roofline_fraction']:.3f} | {temp:.1f}GB |",
+                  file=out)
+    return out.getvalue()
+
+
+def dryrun_status(cells):
+    out = io.StringIO()
+    print("#### Dry-run status — pod / multipod (OK = lower+compile "
+          "succeeded)\n", file=out)
+    print("| arch | " + " | ".join(SHAPES) + " |", file=out)
+    print("|---" * (len(SHAPES) + 1) + "|", file=out)
+    for arch in ARCHS:
+        row = [arch]
+        for shape in SHAPES:
+            marks = []
+            for mesh in ("pod", "multipod"):
+                c = cells.get((arch, shape, mesh))
+                marks.append("?" if c is None else
+                             {"ok": "OK", "skipped": "skip"}.get(
+                                 c["status"], "FAIL"))
+            row.append("/".join(marks))
+        print("| " + " | ".join(row) + " |", file=out)
+    return out.getvalue()
+
+
+def compile_times(cells):
+    ts = [c["t_compile_s"] for c in cells.values()
+          if c.get("status") == "ok"]
+    n_ok = len(ts)
+    n_skip = sum(1 for c in cells.values() if c["status"] == "skipped")
+    return (f"{n_ok} cells compiled (+{n_skip} documented skips); "
+            f"compile time min/median/max = {min(ts):.1f}/"
+            f"{sorted(ts)[len(ts) // 2]:.1f}/{max(ts):.1f}s\n")
+
+
+def main():
+    opt = load(pathlib.Path("results/dryrun"))
+    base = load(pathlib.Path("results/dryrun_baseline"))
+    md = pathlib.Path("EXPERIMENTS.md").read_text()
+    block = (dryrun_status(opt) + "\n" + compile_times(opt) + "\n"
+             + table(base, "Baseline (paper-faithful first build) — "
+                     "single-pod 16x16, per device, per step")
+             + "\n"
+             + table(opt, "Optimized (after §Perf iterations) — "
+                     "single-pod 16x16, per device, per step"))
+    md = md.replace("<!-- ROOFLINE_TABLES -->", block)
+    pathlib.Path("EXPERIMENTS.md").write_text(md)
+    print("rendered")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Build the EXPERIMENTS.md roofline/dry-run tables from results/dryrun.
+
+Usage: python tools/roofline_table.py [results/dryrun] [--tag TAG]
+Prints markdown to stdout.
+"""
+import json
+import pathlib
+import sys
+
+ARCHS = ["mixtral_8x7b", "qwen3_moe_235b_a22b", "granite_3_2b",
+         "llama3_2_3b", "h2o_danube_3_4b", "qwen1_5_110b",
+         "whisper_medium", "mamba2_370m", "internvl2_26b",
+         "jamba_v0_1_52b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_t(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def load(d, tag=""):
+    out = {}
+    suffix = f"-{tag}" if tag else ""
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("pod", "multipod"):
+                f = d / f"{arch}-{shape}-{mesh}{suffix}.json"
+                if f.exists():
+                    out[(arch, shape, mesh)] = json.loads(f.read_text())
+    return out
+
+
+def main():
+    d = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    tag = ""
+    if "--tag" in sys.argv:
+        tag = sys.argv[sys.argv.index("--tag") + 1]
+    cells = load(d, tag)
+
+    print("### Dry-run status (16x16 pod / 2x16x16 multipod)\n")
+    print("| arch | " + " | ".join(SHAPES) + " |")
+    print("|---" * (len(SHAPES) + 1) + "|")
+    for arch in ARCHS:
+        row = [arch]
+        for shape in SHAPES:
+            marks = []
+            for mesh in ("pod", "multipod"):
+                c = cells.get((arch, shape, mesh))
+                if c is None:
+                    marks.append("?")
+                elif c["status"] == "ok":
+                    marks.append("OK")
+                elif c["status"] == "skipped":
+                    marks.append("skip")
+                else:
+                    marks.append("FAIL")
+            row.append("/".join(marks))
+        print("| " + " | ".join(row) + " |")
+
+    print("\n### Roofline terms (single-pod 16x16, per device, per step)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+          "useful | frac | HBM peak |")
+    print("|---" * 9 + "|")
+    worst = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            c = cells.get((arch, shape, "pod"))
+            if not c or c["status"] != "ok":
+                continue
+            r = c["roofline"]
+            peak = r["memory_stats"].get("temp_bytes") or 0
+            args = r["memory_stats"].get("argument_bytes") or 0
+            hbm = (peak + args) / 1e9
+            print(f"| {arch} | {shape} | {fmt_t(r['t_compute_s'])} | "
+                  f"{fmt_t(r['t_memory_s'])} | "
+                  f"{fmt_t(r['t_collective_s'])} | {r['bottleneck']} | "
+                  f"{r['useful_flops_ratio']:.2f} | "
+                  f"{r['roofline_fraction']:.3f} | {hbm:.1f}GB |")
+            worst.append((r["roofline_fraction"], arch, shape,
+                          r["bottleneck"],
+                          r["t_collective_s"] / max(r["t_compute_s"],
+                                                    1e-12)))
+    print("\n### Hillclimb candidates")
+    worst.sort()
+    print("\nworst roofline fraction:")
+    for frac, arch, shape, bn, _ in worst[:6]:
+        print(f"  {arch} {shape}: frac={frac:.4f} bottleneck={bn}")
+    print("\nmost collective-bound (t_coll / t_comp):")
+    for _, arch, shape, bn, ratio in sorted(worst, key=lambda w: -w[4])[:6]:
+        print(f"  {arch} {shape}: coll/comp={ratio:.1f} bottleneck={bn}")
+
+
+if __name__ == "__main__":
+    main()
