@@ -28,7 +28,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.core import collectives as coll
 from repro.launch.roofline import collective_bytes
 
@@ -59,7 +59,9 @@ for name, fn in [
     return rows
 
 
-def run(rows):
+def run(rows, engine="packet"):
+    # engine is irrelevant here: costs are analytic (core/metrics) and
+    # HLO-measured; accepted for orchestrator uniformity.
     for label, nbytes in SIZES.items():
         for n in (16, 256):
             for sched in SCHEDULES:

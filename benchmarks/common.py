@@ -2,37 +2,60 @@
 
 Every module reproduces one paper artifact and returns a list of CSV rows
 ``(name, value, derived)``; ``benchmarks.run`` orchestrates and prints.
-All simulations run the same packet-level engine as the tests.
+All simulations go through the backend-pluggable SimEngine layer
+(``core/engine.py``): ``engine="packet"`` runs the same packet-level
+event loop as the tests, ``engine="flow"`` the vectorized fluid model.
 """
 from __future__ import annotations
 
 from repro.core import fattree
-from repro.core.baselines import (BinaryTreeBcast, MultiUnicastBcast,
-                                  RingBcast)
+from repro.core.baselines import (BASELINE_KINDS, BinaryTreeBcast,
+                                  MultiUnicastBcast, RingBcast,
+                                  flow_baseline_jct)
+from repro.core.engine import make_engine
 from repro.core.gleam import GleamNetwork
-
-
-def gleam_bcast_jct(members, nbytes, *, topo=None, timeout=30.0, **net_kw):
-    net = GleamNetwork(topo or fattree.testbed(n_hosts=len(members)),
-                       **net_kw)
-    g = net.multicast_group(members)
-    g.register()
-    rec = g.bcast(nbytes)
-    return g.run_until_delivered(rec, timeout=timeout), net, g
-
-
-def baseline_bcast_jct(cls, members, nbytes, *, topo=None, chunks=8,
-                       timeout=30.0, **net_kw):
-    net = GleamNetwork(topo or fattree.testbed(n_hosts=len(members)),
-                       **net_kw)
-    b = cls(net, members, chunks=chunks) if cls is not MultiUnicastBcast \
-        else cls(net, members)
-    b.start(nbytes)
-    return b.run(timeout=timeout), net, b
-
 
 BASELINES = {
     "multiunicast": MultiUnicastBcast,
     "ring": RingBcast,
     "bintree": BinaryTreeBcast,
 }
+_KIND_OF = {v: k for k, v in BASELINES.items()}
+
+
+def gleam_bcast_jct(members, nbytes, *, topo=None, engine="packet",
+                    timeout=30.0, **net_kw):
+    """JCT of one Gleam multicast bcast on the chosen backend.
+
+    Returns ``(jct_seconds, engine, record)`` — callers that need
+    backend internals (switch tables, retransmit counters) can reach
+    them through ``engine`` on the packet backend.
+    """
+    eng = make_engine(engine, topo or fattree.testbed(n_hosts=len(members)),
+                      **net_kw)
+    rec = eng.add_bcast(members, nbytes)
+    eng.run(timeout)
+    return rec.jct(len(members) - 1), eng, rec
+
+
+def baseline_bcast_jct(cls_or_kind, members, nbytes, *, topo=None, chunks=8,
+                       engine="packet", timeout=30.0, **net_kw):
+    """JCT of an overlay baseline bcast on the chosen backend.
+
+    ``cls_or_kind`` is a baseline class (packet path) or one of
+    ``BASELINE_KINDS``; returns ``(jct_seconds, engine_or_net, obj)``.
+    """
+    kind = (_KIND_OF[cls_or_kind] if cls_or_kind in _KIND_OF
+            else cls_or_kind)
+    assert kind in BASELINE_KINDS, kind
+    topo = topo or fattree.testbed(n_hosts=len(members))
+    if engine == "packet":
+        net = GleamNetwork(topo, **net_kw)
+        cls = BASELINES[kind]
+        b = cls(net, members, chunks=chunks) if cls is not MultiUnicastBcast \
+            else cls(net, members)
+        b.start(nbytes)
+        return b.run(timeout=timeout), net, b
+    eng = make_engine(engine, topo, **net_kw)
+    jct = flow_baseline_jct(eng, kind, members, nbytes, chunks=chunks)
+    return jct, eng, None

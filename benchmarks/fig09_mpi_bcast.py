@@ -27,15 +27,15 @@ SEGMENT = 128 << 10     # OpenMPI-style pipeline segment size
 MPI_SW_LATENCY = 18e-6
 
 
-def run(rows):
+def run(rows, engine="packet"):
     for nbytes in SIZES:
-        jg, _, _ = gleam_bcast_jct(MEMBERS, nbytes)
+        jg, _, _ = gleam_bcast_jct(MEMBERS, nbytes, engine=engine)
         # OpenMPI tuned bcast at 4 ranks: (split-)binary tree, segmented
         # for pipelining — the root's degree-2 fanout is the steady-state
         # bottleneck the paper's 'stably ~50% less JCT >= 128KB' reflects.
         chunks = max(1, min(nbytes // SEGMENT, 64))
         jo, _, _ = baseline_bcast_jct(BASELINES["bintree"], MEMBERS,
-                                      nbytes, chunks=chunks)
+                                      nbytes, chunks=chunks, engine=engine)
         jg += MPI_SW_LATENCY
         jo += MPI_SW_LATENCY
         label = (f"{nbytes >> 10}KB" if nbytes < (1 << 20)

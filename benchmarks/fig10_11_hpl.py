@@ -18,7 +18,7 @@ from __future__ import annotations
 from benchmarks.common import baseline_bcast_jct, gleam_bcast_jct
 from repro.core import fattree
 from repro.core.baselines import RingBcast
-from repro.core.gleam import GleamNetwork
+from repro.core.engine import make_engine
 
 MEMBERS = ["h0", "h1", "h2", "h3"]
 EPOCHS = 8
@@ -29,38 +29,37 @@ def _epoch_bytes(e):
     return max(int(FIRST_BYTES * (1 - e / EPOCHS)), 1 << 12)
 
 
-def pb_gleam():
-    net = GleamNetwork(fattree.testbed())
-    g = net.multicast_group(MEMBERS)
-    g.register()
+def pb_gleam(engine="packet"):
+    """Panel broadcast: source rotates per epoch (Appendix B) on ONE
+    registered group — the engine handles source switching."""
+    eng = make_engine(engine, fattree.testbed())
     total = 0.0
     for e in range(EPOCHS):
         src = MEMBERS[e % len(MEMBERS)]
-        if src != g.source:
-            g.switch_source(src)
-        rec = g.bcast(_epoch_bytes(e))
-        total += g.run_until_delivered(rec)
+        rec = eng.add_bcast(MEMBERS, _epoch_bytes(e), source=src)
+        eng.run()
+        total += rec.jct(len(MEMBERS) - 1)
     return total
 
 
-def pb_ring():
+def pb_ring(engine="packet"):
     total = 0.0
     for e in range(EPOCHS):
         order = MEMBERS[e % 4:] + MEMBERS[:e % 4]
         # HPL increasing-ring: store-and-forward per hop (chunks=1)
         jct, _, _ = baseline_bcast_jct(RingBcast, order, _epoch_bytes(e),
-                                       chunks=1)
+                                       chunks=1, engine=engine)
         total += jct
     return total
 
 
-def rs_gleam(distribution):
+def rs_gleam(distribution, engine="packet"):
     """Row swap: every column node multicasts its rows to the column.
     Gleam JCT is distribution-independent: the owner sends once."""
     total = 0.0
     for e in range(EPOCHS):
         nbytes = _epoch_bytes(e)
-        jct, _, _ = gleam_bcast_jct(MEMBERS, nbytes)
+        jct, _, _ = gleam_bcast_jct(MEMBERS, nbytes, engine=engine)
         total += jct
     return total
 
@@ -85,13 +84,13 @@ def rs_long(distribution):
     return total
 
 
-def run(rows):
-    pb_g, pb_r = pb_gleam(), pb_ring()
+def run(rows, engine="packet"):
+    pb_g, pb_r = pb_gleam(engine), pb_ring(engine)
     rows.append(("fig11/pb_comm/gleam_ms", pb_g * 1e3, ""))
     rows.append(("fig11/pb_comm/ring_ms", pb_r * 1e3,
                  f"reduction={100 * (1 - pb_g / pb_r):.0f}% (paper 67%)"))
     for dist, paper in (("uniform", 18), ("centralized", 46)):
-        rg, rl = rs_gleam(dist), rs_long(dist)
+        rg, rl = rs_gleam(dist, engine), rs_long(dist)
         rows.append((f"fig11/rs_{dist}/gleam_ms", rg * 1e3, ""))
         rows.append((f"fig11/rs_{dist}/long_ms", rl * 1e3,
                      f"reduction={100 * (1 - rg / rl):.0f}% "

@@ -36,7 +36,13 @@ def ring_jct(group, loss):
     return b.run(timeout=240.0)
 
 
-def run(rows):
+def run(rows, engine="packet"):
+    # Loss recovery (go-back-N, NACK aggregation) only exists in the
+    # packet engine; the fluid model has no packets to drop.  Run the
+    # packet engine regardless of the requested backend.
+    if engine != "packet":
+        rows.append(("fig15/note", 0.0,
+                     f"engine={engine} unsupported; using packet"))
     for group in SIZES:
         base_g = None
         for loss in LOSS_RATES:

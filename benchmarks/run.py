@@ -2,14 +2,35 @@
 
 Prints ``name,value,derived`` CSV rows (value is us/ms/IOPS as named).
 
-    PYTHONPATH=src python -m benchmarks.run              # everything
-    PYTHONPATH=src python -m benchmarks.run fig09 fig14  # a subset
+    PYTHONPATH=src python -m benchmarks.run                    # everything
+    PYTHONPATH=src python -m benchmarks.run fig09 fig14        # a subset
+    PYTHONPATH=src python -m benchmarks.run --engine flow      # fluid model
+
+The ``--engine`` flag selects the simulation backend for every module
+that supports backend selection (see ``core/engine.py``):
+
+- ``packet``  (default) — the cycle-accurate per-packet reference.
+  Highest fidelity: protocol effects (go-back-N recovery, DCQCN, ACK
+  clocking, loss) are simulated for real.  Cost grows with
+  bytes x hosts; practical up to a few hundred hosts.
+- ``flow``    — vectorized max-min fair fluid flows (JAX solver when
+  available).  No per-packet protocol effects, but validated against
+  the packet engine within 10% on small topologies
+  (tests/test_engines.py); runs 1024+-host sweeps in seconds.
+- ``flow-np`` — same fluid model, numpy solver (no JAX needed).
+
+Modules that fundamentally need packet fidelity (fig15's loss sweeps)
+note it in their ``derived`` column and run the packet engine regardless.
+Each module's ``run(rows, engine=...)`` appends rows and returns them.
 """
 from __future__ import annotations
 
+import argparse
 import importlib
 import sys
 import time
+
+from repro.core.engine import ENGINE_CHOICES
 
 MODULES = [
     "fig09_mpi_bcast",       # Fig. 9  MPI_Bcast JCT vs message size
@@ -22,9 +43,16 @@ MODULES = [
 
 
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("filters", nargs="*",
+                    help="substring filters over module names")
+    ap.add_argument("--engine", choices=ENGINE_CHOICES, default="packet",
+                    help="simulation backend (default: packet)")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     wanted = [m for m in MODULES
-              if not argv or any(a in m for a in argv)]
+              if not args.filters or any(a in m for a in args.filters)]
     rows: list = []
     print("name,value,derived")
     for name in wanted:
@@ -32,7 +60,7 @@ def main(argv=None) -> int:
         t0 = time.time()
         before = len(rows)
         try:
-            mod.run(rows)
+            mod.run(rows, engine=args.engine)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rows.append((f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}"))
         for n, v, d in rows[before:]:

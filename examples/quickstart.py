@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import fattree
 from repro.core.baselines import MultiUnicastBcast, RingBcast
+from repro.core.engine import make_engine
 from repro.core.gleam import GleamNetwork
 from repro.configs.base import get_config
 from repro.launch.mesh import single_device_mesh
@@ -29,12 +30,16 @@ def part1_protocol():
     nbytes = 1 << 20
     members = ["h0", "h1", "h2", "h3"]
 
-    net = GleamNetwork(fattree.testbed())
-    g = net.multicast_group(members)
-    g.register()
-    rec = g.bcast(nbytes)
-    jct = g.run_until_delivered(rec)
-    print(f"  gleam (in-fabric, RC reliable) JCT: {jct * 1e6:9.1f} us")
+    # the same experiment on both SimEngine backends (core/engine.py):
+    # per-packet reference vs vectorized fluid model
+    jct = None
+    for engine in ("packet", "flow"):
+        eng = make_engine(engine, fattree.testbed())
+        rec = eng.add_bcast(members, nbytes)
+        eng.run()
+        j = rec.jct(len(members) - 1)
+        jct = jct or j
+        print(f"  gleam (in-fabric) [{engine:7s}] JCT: {j * 1e6:9.1f} us")
 
     for name, cls in [("multi-unicast", MultiUnicastBcast),
                       ("ring overlay", RingBcast)]:

@@ -1,0 +1,49 @@
+"""Version-tolerant JAX API shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check kwarg was renamed
+(``check_rep`` -> ``check_vma``) along the way.  Import it from here so
+every module, test, and benchmark works on any JAX the container ships:
+
+    from repro.compat import shard_map
+
+The wrapper translates whichever check kwarg the caller used into the
+one the installed JAX understands; everything else passes through.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.4.35 exports it top-level
+    from jax import shard_map as _shard_map
+except ImportError:                     # older: the experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *args, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg normalized."""
+    for ours, theirs in (("check_vma", "check_rep"),
+                         ("check_rep", "check_vma")):
+        if ours in kwargs and ours not in _PARAMS and theirs in _PARAMS:
+            kwargs[theirs] = kwargs.pop(ours)
+    return _shard_map(f, *args, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """Size of a named mesh axis, inside shard_map (static python int).
+
+    ``jax.lax.axis_size`` is recent; older releases expose the bound
+    axis frame through ``jax.core.axis_frame`` (which returns either the
+    size itself or a frame object, depending on version).
+    """
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size
+
+
+__all__ = ["shard_map", "axis_size"]

@@ -1,7 +1,9 @@
 """Application-layer multicast baselines (§2.3, Fig. 2a/2b).
 
-All baselines run over plain RC unicast QPs in the same packet simulator,
-so comparisons against Gleam share every modeling assumption:
+The overlay *schedules* (which host relays to which) are plain edge
+lists — ``ring_edges`` / ``binary_tree_edges`` — shared by both
+simulation backends, so packet-level and flow-level runs of the same
+baseline route identically:
 
 - ``MultiUnicastBcast`` — the sender transmits identical data over one RC
   connection per receiver (Fig. 2a): sender-link bottleneck.
@@ -11,18 +13,50 @@ so comparisons against Gleam share every modeling assumption:
 - ``BinaryTreeBcast``   — overlay binomial/binary tree relay, the
   double-binary-tree family's single-tree member.
 
-Each returns per-receiver delivery times so JCT is measured exactly like
-the Gleam path.
+The classes run over plain RC unicast QPs in the packet simulator and
+record per-receiver delivery times so JCT is measured exactly like the
+Gleam path.  ``flow_baseline_jct`` is the fluid-model counterpart: it
+stages each overlay edge as a unicast flow on a ``FlowEngine`` and
+applies the pipelined-round structure analytically on the fluid
+steady-state hop time (the standard scalable approximation).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import packet as pk
 from repro.core.gleam import GleamNetwork
 
 RELAY_OVERHEAD = 1.5e-6       # host store-and-forward cost per message
+
+
+# ------------------------------------------------------------- schedules
+
+def ring_edges(members: Sequence[str]) -> List[Tuple[str, str]]:
+    """Pipeline ring relay edges: 0 -> 1 -> 2 -> ... -> n-1."""
+    return [(members[i], members[i + 1]) for i in range(len(members) - 1)]
+
+
+def binary_tree_edges(members: Sequence[str]) -> List[Tuple[str, str]]:
+    """Binary tree relay edges: member i relays to 2i+1, 2i+2."""
+    out = []
+    for i, m in enumerate(members):
+        for c in (2 * i + 1, 2 * i + 2):
+            if c < len(members):
+                out.append((m, members[c]))
+    return out
+
+
+def multiunicast_edges(members: Sequence[str]) -> List[Tuple[str, str]]:
+    """Fig. 2a: one sender edge per receiver (no relaying)."""
+    return [(members[0], m) for m in members[1:]]
+
+
+def _tree_depth(n: int) -> int:
+    """Rounds for the deepest leaf of binary_tree_edges over n members
+    (heap indexing: member i sits at depth floor(log2(i+1)))."""
+    return int(math.floor(math.log2(n))) if n > 1 else 0
 
 
 class _Bcast:
@@ -134,17 +168,55 @@ class RingBcast(_RelayBcast):
     """Overlay pipeline ring: 0 -> 1 -> 2 -> ... -> n-1."""
 
     def _edges(self):
-        return [(self.members[i], self.members[i + 1])
-                for i in range(len(self.members) - 1)]
+        return ring_edges(self.members)
 
 
 class BinaryTreeBcast(_RelayBcast):
     """Overlay binary tree: member i relays to 2i+1, 2i+2."""
 
     def _edges(self):
-        out = []
-        for i, m in enumerate(self.members):
-            for c in (2 * i + 1, 2 * i + 2):
-                if c < len(self.members):
-                    out.append((m, self.members[c]))
-        return out
+        return binary_tree_edges(self.members)
+
+
+# ------------------------------------------------------------ flow level
+
+BASELINE_KINDS = ("multiunicast", "ring", "bintree")
+
+
+def flow_baseline_jct(engine, kind: str, members: Sequence[str],
+                      nbytes: int, *, chunks: int = 8,
+                      relay_overhead: float = RELAY_OVERHEAD,
+                      key: int = 0) -> float:
+    """Fluid-model JCT of an overlay baseline on a flow ``SimEngine``.
+
+    Stages every relay edge as a concurrent unicast flow of one chunk, so
+    sender fan-out and any shared fabric links contend for bandwidth the
+    max-min-fair way, then applies the schedule's round structure on the
+    steady-state chunk time:
+
+    - ``multiunicast``: no rounds — the n-1 full-volume flows' max
+      completion IS the JCT (the sender link serializes them);
+    - ``ring``:    (n-1 + chunks-1) pipelined rounds;
+    - ``bintree``: (depth + chunks-1) rounds, degree-2 fanout contention
+      captured by the concurrent per-edge flows.
+    """
+    n = len(members)
+    if n <= 1:
+        return 0.0
+    if kind == "multiunicast":
+        recs = [engine.add_unicast(members[0], m, nbytes, key=key)
+                for m in members[1:]]
+        engine.run()
+        return max(r.jct(1) for r in recs)
+    if kind == "ring":
+        edges, rounds = ring_edges(members), (n - 1) + (chunks - 1)
+    elif kind == "bintree":
+        edges, rounds = binary_tree_edges(members), \
+            _tree_depth(n) + (chunks - 1)
+    else:
+        raise ValueError(f"unknown baseline kind {kind!r}")
+    chunk = max(1, math.ceil(nbytes / max(chunks, 1)))
+    recs = [engine.add_unicast(a, b, chunk, key=key) for a, b in edges]
+    engine.run()
+    chunk_t = max(r.jct(1) for r in recs)
+    return rounds * (chunk_t + relay_overhead)

@@ -28,8 +28,7 @@ import jax
 import jax.numpy as jnp
 
 
-def _axis_size(axis_name):
-    return jax.lax.axis_size(axis_name)
+from repro.compat import axis_size as _axis_size  # noqa: E402
 
 
 def _log2(n: int) -> int:
@@ -217,23 +216,6 @@ def allreduce_sum(x, axis_names: Sequence[str], schedule: str = "xla"):
 
 # ------------------------------------------------- schedule cost model
 
-def schedule_cost(schedule: str, n: int, bytes_: int, *, chunks: int = 1,
-                  link_bw: float = 50e9, hop_latency: float = 1e-6):
-    """Analytic alpha-beta cost of broadcasting `bytes_` to n-1 receivers.
-
-    Used by benchmarks/collective_schedules.py to compare against the
-    paper's Fig. 9 structure (sender-bottleneck vs tree vs overlay).
-    """
-    beta = bytes_ / link_bw
-    if n == 1:
-        return 0.0
-    if schedule == "unicast":
-        return (n - 1) * (hop_latency + beta)     # serialized at sender
-    if schedule == "ring":
-        c = max(chunks, 1)
-        return (n - 1 + c - 1) * (hop_latency + beta / c)
-    if schedule in ("gleam_tree", "tree"):
-        return math.ceil(math.log2(n)) * (hop_latency + beta)
-    if schedule == "infabric":                    # ideal switch multicast
-        return hop_latency + beta
-    raise ValueError(schedule)
+# The analytic alpha-beta JCT model moved to core/metrics.py with the
+# rest of the accounting; re-exported here for existing callers.
+from repro.core.metrics import schedule_cost  # noqa: E402,F401

@@ -1,0 +1,354 @@
+"""SimEngine — the backend-pluggable simulation contract.
+
+Every Gleam experiment is, at bottom, a batch of group operations on a
+``Topology``; the *engine* decides at what fidelity they are simulated:
+
+- ``PacketEngine``  — the cycle-accurate reference: per-packet event loop
+  (``packetsim``), real RC endpoints, Gleam switches running Algorithms
+  1-4, go-back-N, DCQCN.  Minutes per epoch at hundreds of hosts.
+- ``FlowEngine``    — max-min fair fluid flows: a multicast epoch is one
+  flow over its distribution-tree links.  Two interchangeable solvers:
+  the vectorized JAX backend (``flowsim_jax``, ``lax.while_loop`` +
+  ``jax.vmap``; default when JAX is importable) and the numpy
+  progressive-filling loop (``flowsim``).  Seconds per epoch at 16k
+  hosts — the §5.3 scale regime.
+
+The contract (``SimEngine``) is three methods:
+
+    rec = eng.add_bcast(members, nbytes)     # stage a one-to-many SEND
+    rec = eng.add_write(members, nbytes)     # stage a one-to-many WRITE
+    rec = eng.add_unicast(src, dst, nbytes)  # stage a plain RC transfer
+    eng.run()                                # drive staged ops to done
+
+Each ``add_*`` returns a ``metrics.MsgRecord``; after ``run()`` the
+record carries per-receiver delivery times and the sender CQE time, so
+JCT / IOPS / IO-latency are computed identically regardless of backend
+(see ``core/metrics.py`` for the §5 definitions).
+
+Engines are selected by name through ``make_engine`` — the same names
+the ``--engine`` flag of ``benchmarks/run.py`` accepts:
+
+    ``packet``   the packet-level reference;
+    ``flow``     fluid model, JAX solver when available (else numpy);
+    ``flow-np``  fluid model, numpy solver (forced).
+
+Fidelity note: the flow engines model serialization of the wire volume
+(payload + per-MTU header overhead) at the max-min fair tree rate, plus
+per-hop propagation and store-and-forward latency along each receiver's
+path.  Cross-validation against the packet engine on small topologies
+agrees within a few percent for >= 64KB messages (tests/test_engines.py
+asserts 10%); protocol-induced effects (loss recovery, DCQCN transients,
+ACK clocking) exist only in the packet engine.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
+    runtime_checkable
+
+from repro.core import packet as pk
+from repro.core.fattree import Topology
+from repro.core.flowsim import FlowSim
+from repro.core.metrics import MsgRecord
+
+ENGINE_CHOICES = ("packet", "flow", "flow-np")
+
+
+@runtime_checkable
+class SimEngine(Protocol):
+    """What a simulation backend must provide (see module docstring)."""
+
+    name: str
+    topo: Topology
+
+    def add_bcast(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
+        """Stage a one-to-many SEND from ``source`` (default: first
+        member) to the remaining members; returns its record."""
+        ...
+
+    def add_write(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, same_mr: bool = False,
+                  key: int = 0) -> MsgRecord:
+        """Stage a one-to-many WRITE (§3.3; ``same_mr`` = Appendix C)."""
+        ...
+
+    def add_unicast(self, src: str, dst: str, nbytes: int, *,
+                    key: int = 0) -> MsgRecord:
+        """Stage a plain RC unicast transfer src -> dst."""
+        ...
+
+    def run(self, timeout: float = 30.0) -> float:
+        """Drive every staged operation to completion; returns sim time."""
+        ...
+
+
+# =========================================================== packet engine
+
+class PacketEngine:
+    """Cycle-accurate backend: adapts ``GleamNetwork``/``MulticastGroup``
+    (per-packet event simulation) to the SimEngine contract.
+
+    Multicast groups are created and registered lazily per member set
+    (registration time is excluded from message records, matching how the
+    paper measures steady-state JCT after setup) and reused across
+    epochs; Appendix-B source switching handles source rotation.
+    """
+
+    name = "packet"
+
+    def __init__(self, topo: Topology, *, group_kw: Optional[dict] = None,
+                 **sim_kw):
+        from repro.core.gleam import GleamNetwork
+        self.topo = topo
+        self.net = GleamNetwork(topo, **sim_kw)
+        self.group_kw = dict(group_kw or {})
+        self._groups: Dict[Tuple[str, ...], object] = {}
+        self._chans: Dict[Tuple[str, str], object] = {}
+        self._staged: List = []                 # submission thunks
+        self._pending: List[Tuple[MsgRecord, int]] = []
+
+    # ------------------------------------------------------------ helpers
+
+    def _group(self, members: Sequence[str]):
+        """Get-or-register the group for a member set.
+
+        Registration drives the simulator (the Appendix-A envelope
+        exchange is itself simulated traffic), which is why data
+        submissions are DEFERRED to ``run()``: staging op B must not
+        silently drain already-staged op A's packets.
+        """
+        key = tuple(members)
+        g = self._groups.get(key)
+        if g is None:
+            g = self.net.multicast_group(members, **self.group_kw)
+            g.register()
+            self._groups[key] = g
+        return g
+
+    def _stage_group_op(self, members, nbytes, source, submit) -> MsgRecord:
+        g = self._group(members)
+        rec = MsgRecord(-1, nbytes, self.net.sim.now)
+
+        def thunk():
+            if source is not None and source != g.source:
+                g.switch_source(source)
+            real = submit(g)
+            # alias the group's bookkeeping to the record we handed out
+            rec.msg_id, rec.t_submit = real.msg_id, real.t_submit
+            g.records[real.msg_id] = rec
+
+        self._staged.append(thunk)
+        self._pending.append((rec, g.n_receivers()))
+        return rec
+
+    # ----------------------------------------------------------- protocol
+
+    def add_bcast(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
+        return self._stage_group_op(members, nbytes, source,
+                                    lambda g: g.bcast(nbytes))
+
+    def add_write(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, same_mr: bool = False,
+                  key: int = 0) -> MsgRecord:
+        return self._stage_group_op(
+            members, nbytes, source,
+            lambda g: g.write(nbytes, same_mr=same_mr))
+
+    def add_unicast(self, src: str, dst: str, nbytes: int, *,
+                    key: int = 0) -> MsgRecord:
+        chan = self._chans.get((src, dst))
+        if chan is None:
+            qa, qb = self.net.unicast_qp(src, dst)
+            recs: Dict[int, MsgRecord] = {}
+            qa.on_complete = lambda m, now: (
+                recs[m.msg_id].__setattr__("t_sender_cqe", now)
+                if m.msg_id in recs else None)
+            qb.on_deliver = lambda mid, now: (
+                recs[mid].t_deliver.__setitem__(dst, now)
+                if mid in recs else None)
+            chan = (qa, recs)
+            self._chans[(src, dst)] = chan
+        qa, recs = chan
+        mid = len(recs)
+        rec = MsgRecord(mid, nbytes, self.net.sim.now)
+        recs[mid] = rec
+
+        def thunk():
+            sim = self.net.sim
+            rec.t_submit = sim.now
+            qa.submit(nbytes, sim.now, msg_id=mid)
+            sim.kick(sim.hosts[src], sim.now)
+
+        self._staged.append(thunk)
+        self._pending.append((rec, 1))
+        return rec
+
+    def run(self, timeout: float = 30.0) -> float:
+        sim = self.net.sim
+        for thunk in self._staged:              # submit everything NOW —
+            thunk()                             # staged ops run concurrently
+        self._staged = []
+        deadline = sim.now + timeout
+        while self._pending:
+            before = sim.events
+            sim.run(until=deadline)
+            self._pending = [
+                (r, n) for r, n in self._pending
+                if len(r.t_deliver) < n or r.t_sender_cqe < 0]
+            if not self._pending:
+                break
+            if sim.events == before or sim.now >= deadline:
+                break                           # stalled or out of budget
+        return sim.now
+
+
+# ============================================================= flow engine
+
+def wire_bytes(nbytes: int, mtu: int = pk.MTU, hdr: int = pk.HDR) -> int:
+    """Payload + per-MTU-segment header overhead actually on the wire."""
+    return nbytes + max(1, math.ceil(nbytes / mtu)) * hdr
+
+
+class FlowEngine:
+    """Fluid backend: one max-min-fair flow per staged operation.
+
+    A multicast (bcast/write) occupies the union of its tree links as a
+    single flow (the switch replicates; the sender serializes once); a
+    unicast occupies its ECMP path.  ``run()`` hands the staged batch to
+    the solver (JAX when ``backend='jax'``/'auto' and available, numpy
+    otherwise), then back-fills the records: delivery time = flow
+    completion + each receiver's path latency (propagation + per-hop
+    store-and-forward of one segment); sender CQE = slowest delivery +
+    the aggregated-ACK return propagation.
+    """
+
+    def __init__(self, topo: Topology, *, backend: str = "auto", **sim_kw):
+        self.topo = topo
+        if sim_kw:
+            # packet-engine physics (loss_rate, p4_mode, ...) have no
+            # fluid counterpart; refusing beats silently comparing a
+            # lossy packet run against an unknowingly lossless flow run
+            raise TypeError("flow engines do not support packet-engine "
+                            f"options: {sorted(sim_kw)}")
+        if backend not in ("auto", "jax", "np", "numpy"):
+            raise ValueError(f"unknown flow backend {backend!r}")
+        use_jax = False
+        if backend in ("auto", "jax"):
+            try:
+                from repro.core.flowsim_jax import HAS_JAX, JaxFlowSim
+                use_jax = HAS_JAX
+            except ImportError:
+                use_jax = False
+            if backend == "jax" and not use_jax:
+                raise RuntimeError("flow backend 'jax' requested but JAX "
+                                   "is not importable")
+        self._sim_cls = JaxFlowSim if use_jax else FlowSim
+        self.name = "flow" if use_jax else "flow-np"
+        self._sim = self._sim_cls(topo)          # LinkMap + solver
+        self._staged: List[tuple] = []           # (links, volume, rec, info)
+        self._next_msg = 0
+        self.now = 0.0
+
+    # ------------------------------------------------------------ latency
+
+    def _path_latency(self, src: str, dst: str, seg_wire: int,
+                      key: int) -> Tuple[float, float]:
+        """(one-way delivery latency, return propagation) src -> dst.
+
+        Delivery latency counts every hop's propagation plus one
+        segment's store-and-forward serialization at each hop after the
+        first (the first serialization is part of the message wire time).
+        """
+        prop, sf = 0.0, 0.0
+        for i, hop in enumerate(self.topo.path_links(src, dst, key)):
+            link = self.topo.links[hop]
+            prop += link.delay
+            if i > 0:
+                sf += seg_wire / link.bw
+        return prop + sf, prop
+
+    # ----------------------------------------------------------- protocol
+
+    def _stage(self, links, volume: float, rec: MsgRecord,
+               deliver: Dict[str, float], cqe_extra: float) -> MsgRecord:
+        self._staged.append((links, volume, rec, deliver, cqe_extra))
+        return rec
+
+    def _mcast(self, members: Sequence[str], nbytes: int, volume: float,
+               source: Optional[str], key: int) -> MsgRecord:
+        source = source or members[0]
+        links = self._sim.multicast_tree_links(source, members, key)
+        rec = MsgRecord(self._next_msg, nbytes, self.now)
+        self._next_msg += 1
+        seg = wire_bytes(min(nbytes, pk.MTU))
+        deliver, back = {}, 0.0
+        for m in members:
+            if m == source:
+                continue
+            lat, prop = self._path_latency(source, m, seg, key)
+            deliver[m] = lat
+            back = max(back, prop)
+        return self._stage(links, volume, rec, deliver, back)
+
+    def add_bcast(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
+        return self._mcast(members, nbytes, wire_bytes(nbytes), source, key)
+
+    def add_write(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, same_mr: bool = False,
+                  key: int = 0) -> MsgRecord:
+        volume = float(wire_bytes(nbytes))
+        if not same_mr:
+            # §3.3: the MR_UPDATE preamble rides the same tree
+            volume += wire_bytes(12 * (len(members) - 1) + 16)
+        return self._mcast(members, nbytes, volume, source, key)
+
+    def add_unicast(self, src: str, dst: str, nbytes: int, *,
+                    key: int = 0) -> MsgRecord:
+        links = self._sim.unicast_links(src, dst, key)
+        rec = MsgRecord(self._next_msg, nbytes, self.now)
+        self._next_msg += 1
+        seg = wire_bytes(min(nbytes, pk.MTU))
+        lat, prop = self._path_latency(src, dst, seg, key)
+        return self._stage(links, wire_bytes(nbytes), rec, {dst: lat}, prop)
+
+    def run(self, timeout: float = 30.0) -> float:
+        if not self._staged:
+            return self.now
+        sim = self._sim                          # reuse routing + caps
+        sim.flows, sim.now = [], 0.0             # fresh batch, epoch-local t
+        flows = [sim.add(links, volume)
+                 for links, volume, _, _, _ in self._staged]
+        sim.run()
+        t0 = self.now
+        for f, (_, _, rec, deliver, back) in zip(flows, self._staged):
+            for m, lat in deliver.items():
+                rec.t_deliver[m] = t0 + f.done_t + lat
+            rec.t_sender_cqe = (max(rec.t_deliver.values()) + back
+                                if deliver else t0 + f.done_t)
+            self.now = max(self.now, rec.t_sender_cqe)
+        self._staged = []
+        return self.now
+
+
+# ================================================================= factory
+
+def make_engine(name: str, topo: Topology, **kw) -> SimEngine:
+    """Build a backend by ``--engine`` name (see ENGINE_CHOICES).
+
+    Extra kwargs go to the backend: the packet engine forwards them to
+    ``GleamNetwork``/``PacketSim`` (``loss_rate``, ``seed``, ``p4_mode``,
+    ``ecn_backlog``, plus ``group_kw`` for MulticastGroup tuning); the
+    flow engines accept ``backend`` ('auto' | 'jax' | 'np').
+    """
+    if name == "packet":
+        return PacketEngine(topo, **kw)
+    if name == "flow":
+        kw.setdefault("backend", "auto")
+        return FlowEngine(topo, **kw)
+    if name in ("flow-np", "flow_np"):
+        kw["backend"] = "np"
+        return FlowEngine(topo, **kw)
+    raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_CHOICES}")

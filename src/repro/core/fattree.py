@@ -23,6 +23,7 @@ Builders:
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Sequence, Tuple
 
 
@@ -33,12 +34,23 @@ class Link:
 
 
 class Topology:
+    # Per-destination BFS distance maps are cached for routing; on a
+    # 16384-host fat tree one map is ~25k entries and every host is
+    # eventually a destination, so an unbounded cache walks into tens
+    # of GB.  LRU-bound it BY MEMORY, not count: packet-level sims keep
+    # hundreds of destinations hot at once (every forwarded packet does
+    # a dist() lookup) and must all fit, while flow-level staging on
+    # 16k-host topologies touches each destination in tight succession
+    # and tolerates a small cache.  ~150B per dict entry, measured.
+    DIST_CACHE_BYTES = 256 << 20
+    _DIST_ENTRY_BYTES = 150
+
     def __init__(self):
         self.ports: Dict[str, Dict[int, Tuple[str, int]]] = {}
         self.links: Dict[Tuple[str, int], Link] = {}   # (node, port) -> Link
         self.hosts: List[str] = []
         self.switches: List[str] = []
-        self._dist: Dict[str, Dict[str, int]] = {}
+        self._dist: "OrderedDict[str, Dict[str, int]]" = OrderedDict()
 
     # ------------------------------------------------------------ building
 
@@ -74,10 +86,21 @@ class Topology:
             frontier = nxt
         return dist
 
+    def _dist_cache_cap(self) -> int:
+        """Max cached distance maps within the memory budget (>= 64)."""
+        per_map = max(len(self.ports), 1) * self._DIST_ENTRY_BYTES
+        return max(self.DIST_CACHE_BYTES // per_map, 64)
+
     def dist(self, node: str, dst: str) -> int:
-        if dst not in self._dist:
-            self._dist[dst] = self._bfs(dst)
-        return self._dist[dst][node]
+        d = self._dist.get(dst)
+        if d is None:
+            d = self._dist[dst] = self._bfs(dst)
+            cap = self._dist_cache_cap()
+            while len(self._dist) > cap:
+                self._dist.popitem(last=False)
+        else:
+            self._dist.move_to_end(dst)
+        return d[node]
 
     def candidate_ports(self, node: str, dst: str) -> List[int]:
         """All ports on shortest paths node -> dst (the ECMP set)."""

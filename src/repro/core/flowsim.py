@@ -16,6 +16,11 @@ Model:
 
 Under HPL's symmetric workloads flows complete in large simultaneous
 waves, so even 16384-host topologies run in seconds.
+
+``LinkMap`` (topology -> dense directed-link ids, unicast paths, multicast
+tree link sets) is shared with the vectorized JAX backend
+(``flowsim_jax``) so both flow engines route identically; only the
+max-min solver differs.
 """
 from __future__ import annotations
 
@@ -29,30 +34,27 @@ from repro.core.fattree import Topology
 INF = float("inf")
 
 
-@dataclasses.dataclass
-class Flow:
-    links: Tuple[int, ...]          # directed link ids
-    volume: float                   # bytes remaining
-    done_t: float = -1.0
-    rate: float = 0.0
-    tag: object = None
+class LinkMap:
+    """Dense directed-link indexing over a Topology, plus routing helpers.
 
+    Link ``i`` is the directed (node, port) egress; ``cap[i]`` is its
+    bandwidth in bytes/s and ``delay[i]`` its propagation delay.
+    """
 
-class FlowSim:
     def __init__(self, topo: Topology):
         self.topo = topo
         self.link_id: Dict[Tuple[str, int], int] = {}
-        caps = []
+        caps: List[float] = []
+        delays: List[float] = []
         for (node, port), link in topo.links.items():
             self.link_id[(node, port)] = len(caps)
             caps.append(link.bw)
+            delays.append(link.delay)
         self.cap = np.asarray(caps, float)
-        self.flows: List[Flow] = []
-        self.now = 0.0
-
-    # ------------------------------------------------------------ paths
+        self.delay = np.asarray(delays, float)
 
     def unicast_links(self, src: str, dst: str, key: int = 0):
+        """Directed link ids along the ECMP unicast path src -> dst."""
         return tuple(self.link_id[hop]
                      for hop in self.topo.path_links(src, dst, key))
 
@@ -67,6 +69,22 @@ class FlowSim:
             if m != src:
                 links.update(self.unicast_links(src, m, key))
         return tuple(sorted(links))
+
+
+@dataclasses.dataclass
+class Flow:
+    links: Tuple[int, ...]          # directed link ids
+    volume: float                   # bytes remaining
+    done_t: float = -1.0
+    rate: float = 0.0
+    tag: object = None
+
+
+class FlowSim(LinkMap):
+    def __init__(self, topo: Topology):
+        super().__init__(topo)
+        self.flows: List[Flow] = []
+        self.now = 0.0
 
     # ------------------------------------------------------------ engine
 

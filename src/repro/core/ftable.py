@@ -58,6 +58,10 @@ class GroupTable:
     # --- congestion-signal filtering (§3.5): per-port CNP counters
     cnp_count: Dict[int, float] = dataclasses.field(default_factory=dict)
     psn_window: int = PSN_WINDOW        # 2^22 in p4 mode
+    # --- registration load attributed to each port by THIS group, so
+    # uninstalling the group can release its share of the switch-wide
+    # port-utilization counters (Alg. 4's load-balancing input)
+    port_refs: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def add_connected(self, port: int, dest_ip: int, dest_qpn: int,
                       va: int = 0, rkey: int = 0):
@@ -87,19 +91,57 @@ class GroupTable:
 
 
 class ForwardingTables:
-    """All multicast tables on one switch, indexed by GroupIP."""
+    """All multicast tables on one switch, indexed by GroupIP.
 
-    def __init__(self, p4_mode: bool = False):
+    Switch table memory is finite (the §3.3 arithmetic: 1K maximal
+    groups in under a megabyte), so the store supports an optional
+    ``capacity`` (max concurrently installed groups): installing one
+    more evicts the least-recently-used group, exactly what a
+    deployment does when group registrations outlive their tenants.
+    ``get``/``create`` count as uses; ``remove`` is the explicit
+    deregistration path.  ``evictions`` counts LRU victims so tests and
+    benchmarks can see thrash.
+    """
+
+    def __init__(self, p4_mode: bool = False,
+                 capacity: Optional[int] = None):
         from repro.core.packet import PSN_WINDOW_P4
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.tables: Dict[int, GroupTable] = {}
         self.window = PSN_WINDOW_P4 if p4_mode else PSN_WINDOW
+        self.capacity = capacity
+        self.evictions = 0
+        self.on_remove = None               # callback(table) on uninstall
+        self._lru: Dict[int, None] = {}     # insertion-ordered id set
+
+    def _touch(self, group_ip: int) -> None:
+        self._lru.pop(group_ip, None)
+        self._lru[group_ip] = None
 
     def get(self, group_ip: int) -> Optional[GroupTable]:
-        return self.tables.get(group_ip)
+        t = self.tables.get(group_ip)
+        if t is not None:
+            self._touch(group_ip)
+        return t
 
     def create(self, group_ip: int) -> GroupTable:
+        if (self.capacity is not None and group_ip not in self.tables
+                and len(self.tables) >= self.capacity):
+            victim = next(iter(self._lru))
+            self.remove(victim)
+            self.evictions += 1
         t = GroupTable(group_ip, psn_window=self.window)
         self.tables[group_ip] = t
+        self._touch(group_ip)
+        return t
+
+    def remove(self, group_ip: int) -> Optional[GroupTable]:
+        """Uninstall a group (deregistration); returns the old table."""
+        self._lru.pop(group_ip, None)
+        t = self.tables.pop(group_ip, None)
+        if t is not None and self.on_remove is not None:
+            self.on_remove(t)
         return t
 
     def total_bytes(self) -> int:

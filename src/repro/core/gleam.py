@@ -23,36 +23,20 @@ JCT, IOPS and IO latency exactly as §5 defines them.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence
 
 from repro.core import packet as pk
 from repro.core.endpoint import QP
 from repro.core.fattree import Topology
+from repro.core.metrics import MsgRecord
 from repro.core.packetsim import Host, PacketSim
+
+__all__ = ["GleamNetwork", "MulticastGroup", "MsgRecord", "VIRTUAL_QPN"]
 
 VIRTUAL_QPN = 0x1
 GROUP_IP_BASE = 1 << 20          # far above any host IP
 ENVELOPE_MAX_NODES = 183         # MTU-limited (Appendix A, Fig. 17)
-
-
-@dataclasses.dataclass
-class MsgRecord:
-    msg_id: int
-    nbytes: int
-    t_submit: float
-    t_sender_cqe: float = -1.0
-    t_deliver: Dict[str, float] = dataclasses.field(default_factory=dict)
-
-    def jct(self, n_receivers: int) -> float:
-        if len(self.t_deliver) < n_receivers:
-            return float("inf")
-        return max(self.t_deliver.values()) - self.t_submit
-
-    @property
-    def io_latency(self) -> float:
-        return self.t_sender_cqe - self.t_submit
 
 
 class MulticastGroup:

@@ -57,12 +57,15 @@ class GleamSwitch:
     that doesn't hit a multicast table."""
 
     def __init__(self, name: str, topo: Topology, host_ip: Dict[str, int],
-                 *, p4_mode: bool = False, cnp_aging_tau: float = 100e-6):
+                 *, p4_mode: bool = False, cnp_aging_tau: float = 100e-6,
+                 table_capacity: Optional[int] = None):
         self.name = name
         self.topo = topo
         self.host_ip = host_ip
         self.ip_host = {v: k for k, v in host_ip.items()}
-        self.tables = ForwardingTables(p4_mode=p4_mode)
+        self.tables = ForwardingTables(p4_mode=p4_mode,
+                                       capacity=table_capacity)
+        self.tables.on_remove = self._release_ports
         self.port_util: Dict[int, int] = {}     # group registrations / port
         self.stats = SwitchStats()
         self.cnp_tau = cnp_aging_tau
@@ -92,6 +95,19 @@ class GleamSwitch:
     def route_envelope(self, p: pk.Packet, in_port: int,
                        now: float) -> List[Emit]:
         return self._envelope(p, in_port, now)
+
+    def _release_ports(self, t) -> None:
+        """A group was uninstalled (eviction/deregistration): give its
+        registration load back to the port-utilization counters so
+        Algorithm 4's least-utilized-port choice is not skewed by
+        ghosts."""
+        for port, refs in t.port_refs.items():
+            self.port_util[port] = max(self.port_util.get(port, 0) - refs,
+                                       0)
+
+    def _count_port_ref(self, t: GroupTable, port: int) -> None:
+        self.port_util[port] = self.port_util.get(port, 0) + 1
+        t.port_refs[port] = t.port_refs.get(port, 0) + 1
 
     # --------------------------------------------------------- data plane
 
@@ -269,7 +285,7 @@ class GleamSwitch:
             if direct is not None:
                 t.add_connected(direct, ip, node["qpn"],
                                 node.get("va", 0), node.get("rkey", 0))
-                self.port_util[direct] = self.port_util.get(direct, 0) + 1
+                self._count_port_ref(t, direct)
                 down.setdefault(direct, []).append(node)
                 continue
             cands = self.topo.candidate_ports(self.name, host)
@@ -283,7 +299,7 @@ class GleamSwitch:
             else:
                 out = min(cands, key=lambda c: (self.port_util.get(c, 0), c))
             t.add_forwarded(out)
-            self.port_util[out] = self.port_util.get(out, 0) + 1
+            self._count_port_ref(t, out)
             down.setdefault(out, []).append(node)
         emits: List[Emit] = []
         for port, nodes in down.items():

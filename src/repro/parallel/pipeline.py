@@ -28,6 +28,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def pipeline(stage_fn, axis_name: str):
     """Build a pipelined runner for ``stage_fn(stage_params, x) -> y``.
@@ -39,7 +41,7 @@ def pipeline(stage_fn, axis_name: str):
     """
 
     def run(stage_params, xs):
-        n_stages = jax.lax.axis_size(axis_name)
+        n_stages = axis_size(axis_name)
         sid = jax.lax.axis_index(axis_name)
         n_micro = xs.shape[0]
         ticks = n_micro + n_stages - 1

@@ -1,0 +1,121 @@
+"""Unit tests for the extended multicast forwarding table (Fig. 5):
+entry install / lookup / aggregation queries, the §3.3 memory
+arithmetic, and the capacity-bounded LRU eviction path of
+``ForwardingTables``.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.ftable import (CONNECTED, ENTRY_BYTES, FORWARDED,
+                               ForwardingTables, GroupTable)
+from repro.core.packet import PSN_MOD, PSN_WINDOW_P4
+
+
+# ============================================================== GroupTable
+
+class TestInstallLookup:
+    def test_connected_entry_carries_l3_l4_and_mr_state(self):
+        t = GroupTable(group_ip=7)
+        t.add_connected(3, dest_ip=42, dest_qpn=17, va=0x1000, rkey=0x9)
+        e = t.entries[3]
+        assert (e.type, e.port) == (CONNECTED, 3)
+        assert (e.dest_ip, e.dest_qpn, e.va, e.rkey) == (42, 17, 0x1000, 0x9)
+        # fresh entries have acked nothing: cumulative "up to -1"
+        assert e.ack_psn == PSN_MOD - 1
+
+    def test_forwarded_never_downgrades_connected(self):
+        t = GroupTable(group_ip=7)
+        t.add_connected(1, dest_ip=5, dest_qpn=20)
+        t.add_forwarded(1)                      # Alg. 4 reuse: keep as-is
+        assert t.entries[1].type == CONNECTED
+
+    def test_min_ack_returns_slowest_port(self):
+        t = GroupTable(group_ip=7)
+        t.add_connected(0, 1, 16)
+        t.add_connected(1, 2, 17)
+        t.add_connected(2, 3, 18)
+        t.entries[0].ack_psn = 10
+        t.entries[1].ack_psn = 4                # the straggler
+        t.entries[2].ack_psn = 30
+        mn, mp = t.min_ack()
+        assert (mn, mp) == (4, 1)
+
+    def test_table_bytes_matches_fig5_arithmetic(self):
+        t = GroupTable(group_ip=7)
+        t.add_connected(0, 1, 16)
+        t.add_forwarded(1)
+        expected = (16                              # group-level state
+                    + ENTRY_BYTES[CONNECTED] + 4    # + per-port cc counter
+                    + ENTRY_BYTES[FORWARDED] + 4)
+        assert t.table_bytes() == expected
+
+
+# ======================================================== ForwardingTables
+
+class TestStore:
+    def test_create_get_roundtrip_and_p4_window(self):
+        ft = ForwardingTables(p4_mode=True)
+        t = ft.create(100)
+        assert ft.get(100) is t
+        assert t.psn_window == PSN_WINDOW_P4
+        assert ft.get(101) is None
+
+    def test_remove_uninstalls(self):
+        ft = ForwardingTables()
+        ft.create(100)
+        assert ft.remove(100) is not None
+        assert ft.get(100) is None
+        assert ft.remove(100) is None           # idempotent
+        assert ft.total_bytes() == 0
+
+    def test_lru_eviction_at_capacity(self):
+        ft = ForwardingTables(capacity=2)
+        ft.create(1)
+        ft.create(2)
+        ft.get(1)                               # 1 is now most recent
+        ft.create(3)                            # evicts 2, the LRU
+        assert ft.get(2) is None
+        assert ft.get(1) is not None and ft.get(3) is not None
+        assert ft.evictions == 1
+
+    def test_recreate_existing_group_does_not_evict(self):
+        ft = ForwardingTables(capacity=2)
+        ft.create(1)
+        ft.create(2)
+        ft.create(2)                            # re-registration, same id
+        assert ft.evictions == 0
+        assert ft.get(1) is not None
+
+    def test_unbounded_by_default(self):
+        ft = ForwardingTables()
+        for g in range(64):
+            ft.create(g)
+        assert ft.evictions == 0
+        assert len(ft.tables) == 64
+
+
+# =========================================== eviction through a real switch
+
+def test_switch_table_capacity_evicts_oldest_group():
+    """A capacity-1 switch keeps only the most recent registration; the
+    evicted group's data falls back to unicast forwarding (no table)."""
+    from repro.core import fattree
+    from repro.core.gleam import GleamNetwork
+
+    net = GleamNetwork(fattree.testbed())
+    sw = net.sim.switches["SW0"]
+    sw.tables.capacity = 1
+    g1 = net.multicast_group(["h0", "h1", "h2"])
+    g1.register()
+    g2 = net.multicast_group(["h0", "h2", "h3"])
+    g2.register()
+    assert sw.tables.get(g1.group_ip) is None
+    assert sw.tables.get(g2.group_ip) is not None
+    assert sw.tables.evictions == 1
+    # the evicted group released its registration load: remaining
+    # port_util equals exactly what g2's live table accounts for
+    live = sw.tables.get(g2.group_ip)
+    assert sum(sw.port_util.values()) == sum(live.port_refs.values())
+    sw.tables.remove(g2.group_ip)
+    assert sum(sw.port_util.values()) == 0

@@ -14,7 +14,11 @@ delivers every byte to every receiver (go-back-N + aggregation compose).
 """
 from __future__ import annotations
 
-from hypothesis import HealthCheck, given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core import fattree, packet as pk
 from repro.core.gleam import GleamNetwork

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Docs consistency checker (wired into CI).
+
+Checks, over README.md and docs/*.md:
+
+1. **Links resolve** — every relative markdown link `[..](path)` points
+   at a file or directory that exists (external http(s)/mailto links
+   are skipped; intra-page `#anchors` are stripped before checking).
+2. **Figure table is complete** — every `benchmarks/fig*.py` module is
+   mentioned in README.md's benchmarks table, and every module the
+   table names exists on disk.
+3. **Backtick paths exist** — inline-code references to repo paths of
+   the form `src/...`, `benchmarks/...`, `tests/...`, `tools/...`,
+   `docs/...`, `examples/...` resolve (catches renames that orphan the
+   docs).
+
+Exit code 0 = clean; 1 = problems (listed on stderr).
+
+    python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODEPATH_RE = re.compile(
+    r"`((?:src|benchmarks|tests|tools|docs|examples)/[A-Za-z0-9_./*-]+)`")
+
+
+def check_file(md_path: str, root: str, problems: list) -> str:
+    text = open(md_path, encoding="utf-8").read()
+    rel = os.path.relpath(md_path, root)
+    base = os.path.dirname(md_path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:                       # pure intra-page anchor
+            continue
+        if not os.path.exists(os.path.join(base, path)):
+            problems.append(f"{rel}: broken link -> {target}")
+    for ref in CODEPATH_RE.findall(text):
+        pattern = os.path.join(root, ref)
+        if not (os.path.exists(pattern) or glob.glob(pattern)):
+            problems.append(f"{rel}: dangling code path -> {ref}")
+    return text
+
+
+def check_figure_table(readme_text: str, root: str, problems: list) -> None:
+    on_disk = {os.path.basename(p) for p in
+               glob.glob(os.path.join(root, "benchmarks", "fig*.py"))}
+    in_table = set(re.findall(r"benchmarks/(fig[A-Za-z0-9_]+\.py)",
+                              readme_text))
+    for missing in sorted(on_disk - in_table):
+        problems.append(
+            f"README.md: benchmarks/{missing} missing from figure table")
+    for stale in sorted(in_table - on_disk):
+        problems.append(
+            f"README.md: figure table names nonexistent benchmarks/{stale}")
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = os.path.abspath(argv[0] if argv else
+                           os.path.join(os.path.dirname(__file__), ".."))
+    readme = os.path.join(root, "README.md")
+    problems: list = []
+    if not os.path.exists(readme):
+        problems.append("README.md: missing")
+        readme_text = ""
+    else:
+        readme_text = check_file(readme, root, problems)
+    for md in sorted(glob.glob(os.path.join(root, "docs", "*.md"))):
+        check_file(md, root, problems)
+    check_figure_table(readme_text, root, problems)
+    if problems:
+        for p in problems:
+            print(f"check_docs: {p}", file=sys.stderr)
+        print(f"check_docs: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
