@@ -11,10 +11,17 @@ SimEngine and solved in one max-min fair batch.  Ring JCT uses the
 pipelined-chunk schedule on steady-state hop rates; `long` spreads then
 exchanges (volume-optimal when uniform).
 
+The sweep is stage-then-batch: every (scale, workload) scenario on the
+same topology is staged on ONE engine and solved by a single
+``run_many`` call — the shape-bucketed solver compiles once for the
+whole sweep instead of once per point, and the topology (with its BFS
+routing caches) is built once per size class.  ``--serial`` restores
+the PR-1 behavior (fresh engine + solve per scenario) for A/B timing;
+``tools/bench.py`` records both.
+
 This figure is inherently beyond packet-level reach (the paper
 parallelized ns-3 for it); requesting ``--engine packet`` falls back to
-``flow`` with a note.  The vectorized JAX backend runs the 1024-host
-sweep in seconds; ``flow-np`` is the numpy fallback.
+``flow`` with a note.
 
 Standalone:
 
@@ -24,6 +31,7 @@ Standalone:
 from __future__ import annotations
 
 import argparse
+import functools
 import os
 import sys
 import time
@@ -41,16 +49,21 @@ SCALES = (8, 16, 32)               # 1024-host fat-tree
 SCALES_FULL = (8, 16, 32, 64, 128)  # adds the 16384-host config
 
 
+@functools.lru_cache(maxsize=2)
+def _build(big: bool):
+    """The two §5.3 size classes, cached: the topology AND its BFS
+    routing caches are reused across every scale that fits."""
+    if big:
+        return fat_tree(n_pods=32, leaves_per_pod=16, hosts_per_leaf=32,
+                        aggs_per_pod=16, bw=200 * GBPS)
+    return fat_tree(n_pods=8, leaves_per_pod=8, hosts_per_leaf=16,
+                    aggs_per_pod=8, bw=200 * GBPS)
+
+
 def build(n):
     """Fat-tree with >= n*n hosts (paper: 16384 hosts, 64-port, 200G)."""
     need = n * n
-    # hosts = pods * leaves * hosts_per_leaf; keep radix realistic
-    if need <= 1024:
-        topo = fat_tree(n_pods=8, leaves_per_pod=8, hosts_per_leaf=16,
-                        aggs_per_pod=8, bw=200 * GBPS)
-    else:
-        topo = fat_tree(n_pods=32, leaves_per_pod=16, hosts_per_leaf=32,
-                        aggs_per_pod=16, bw=200 * GBPS)
+    topo = _build(need > 1024)
     assert len(topo.hosts) >= need, (len(topo.hosts), need)
     return topo
 
@@ -60,29 +73,23 @@ def _flow_engine(name: str):
     return "flow" if name == "packet" else name
 
 
-def gleam_jct(n, engine="flow") -> float:
-    topo = build(n)
-    eng = make_engine(_flow_engine(engine), topo)
-    hosts = topo.hosts
-    recs = []
-    for row in range(n):                       # N PB groups (rows)
+# ------------------------------------------------------------- scenarios
+
+def _stage_gleam(eng, n, recs):
+    """N PB groups (rows) + N RS groups (columns), one bcast each."""
+    hosts = eng.topo.hosts
+    for row in range(n):
         members = hosts[row * n:(row + 1) * n]
         recs.append(eng.add_bcast(members, VOLUME, key=row))
-    for col in range(n):                       # N RS groups (columns)
+    for col in range(n):
         members = [hosts[row * n + col] for row in range(n)]
         recs.append(eng.add_bcast(members, VOLUME, key=n + col))
-    eng.run()
-    return max(r.jct(n - 1) for r in recs)
 
 
-def ring_long_jct(n, engine="flow") -> float:
-    """PB via pipelined increasing-ring + RS via `long` exchange, both as
-    concurrent unicast meshes; serial hop structure applied analytically
-    on the fluid steady-state rate."""
-    topo = build(n)
-    eng = make_engine(_flow_engine(engine), topo)
-    hosts = topo.hosts
-    ring_recs, long_recs = [], []
+def _stage_ring_long(eng, n, ring_recs, long_recs):
+    """PB via pipelined increasing-ring + RS via `long` exchange, both
+    as concurrent unicast meshes."""
+    hosts = eng.topo.hosts
     for row in range(n):
         members = hosts[row * n:(row + 1) * n]
         for i in range(n - 1):                 # ring hop i -> i+1
@@ -94,22 +101,80 @@ def ring_long_jct(n, engine="flow") -> float:
             long_recs.append(eng.add_unicast(
                 members[i], members[i + 1],
                 VOLUME * (n - 1) // n, key=n + col))
-    eng.run()
-    # steady-state chunk time on the slowest ring hop:
+
+
+def _gleam_value(n, recs) -> float:
+    return max(r.jct(n - 1) for r in recs)
+
+
+def _ring_long_value(n, ring_recs, long_recs) -> float:
+    """Serial hop structure applied analytically on the fluid
+    steady-state rate: chunk time on the slowest ring hop, pipelined."""
     chunk_t = max(r.jct(1) for r in ring_recs)
     ring_jct = (n - 1 + CHUNKS - 1) * chunk_t
     long_jct = max(r.jct(1) for r in long_recs)
     return max(ring_jct, long_jct)
 
 
-def run(rows, engine="flow", scales=None):
+# ---------------------------------------------- per-scenario entry points
+
+def gleam_jct(n, engine="flow") -> float:
+    """Standalone (fresh-engine, solve-per-call) gleam point."""
+    eng = make_engine(_flow_engine(engine), build(n))
+    recs: list = []
+    _stage_gleam(eng, n, recs)
+    eng.run()
+    return _gleam_value(n, recs)
+
+
+def ring_long_jct(n, engine="flow") -> float:
+    """Standalone (fresh-engine, solve-per-call) baseline point."""
+    eng = make_engine(_flow_engine(engine), build(n))
+    ring_recs: list = []
+    long_recs: list = []
+    _stage_ring_long(eng, n, ring_recs, long_recs)
+    eng.run()
+    return _ring_long_value(n, ring_recs, long_recs)
+
+
+# ----------------------------------------------------------------- sweep
+
+def run(rows, engine="flow", scales=None, batched=True):
     """Default scales stop at 32 (1024 hosts, seconds) in BOTH entry
-    points; the 16384-host top end is opt-in (CLI --full) because its
-    python-side tree staging takes tens of minutes."""
+    points; the 16384-host top end is opt-in (CLI --full).
+
+    ``batched=True`` stages the whole sweep on one engine per topology
+    and solves it with a single ``run_many``; ``batched=False`` is the
+    PR-1 serial path (one engine + solve per scenario, for A/B timing).
+    """
     engine = _flow_engine(engine)
-    for n in scales or SCALES:
-        jg = gleam_jct(n, engine)
-        jb = ring_long_jct(n, engine)
+    scales = tuple(scales or SCALES)
+    results = {}
+    if batched:
+        for big in sorted({n * n > 1024 for n in scales}):
+            group = [n for n in scales if (n * n > 1024) == big]
+            eng = make_engine(engine, _build(big))
+            staged = []                 # (n, gleam_recs, ring, long)
+            scenarios = []
+            for n in group:
+                g_recs: list = []
+                r_recs: list = []
+                l_recs: list = []
+                staged.append((n, g_recs, r_recs, l_recs))
+                scenarios.append(
+                    lambda e, n=n, r=g_recs: _stage_gleam(e, n, r))
+                scenarios.append(
+                    lambda e, n=n, a=r_recs, b=l_recs:
+                    _stage_ring_long(e, n, a, b))
+            eng.run_many(scenarios)
+            for n, g_recs, r_recs, l_recs in staged:
+                results[n] = (_gleam_value(n, g_recs),
+                              _ring_long_value(n, r_recs, l_recs))
+    else:
+        for n in scales:
+            results[n] = (gleam_jct(n, engine), ring_long_jct(n, engine))
+    for n in scales:
+        jg, jb = results[n]
         rows.append((f"fig14/hpl_{n}x{n}/gleam_ms", jg * 1e3,
                      f"engine={engine}"))
         rows.append((f"fig14/hpl_{n}x{n}/ring_long_ms", jb * 1e3,
@@ -126,13 +191,17 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true",
                     help=f"sweep {SCALES_FULL} (16384-host top end) "
                          f"instead of {SCALES}; staging the 16k-host "
-                         f"trees is python-routing-bound (expect tens "
-                         f"of minutes; solver time stays in seconds)")
+                         f"trees is python-routing-bound (expect "
+                         f"minutes; solver time stays in seconds)")
+    ap.add_argument("--serial", action="store_true",
+                    help="PR-1 behavior: fresh engine + solve per "
+                         "scenario instead of one batched run_many")
     args = ap.parse_args(argv)
     rows: list = []
     t0 = time.time()
     run(rows, engine=args.engine,
-        scales=SCALES_FULL if args.full else SCALES)
+        scales=SCALES_FULL if args.full else SCALES,
+        batched=not args.serial)
     print("name,value,derived")
     for n, v, d in rows:
         print(f"{n},{v:.3f},{d}")

@@ -13,12 +13,22 @@ Every Gleam experiment is, at bottom, a batch of group operations on a
   progressive-filling loop (``flowsim``).  Seconds per epoch at 16k
   hosts — the §5.3 scale regime.
 
-The contract (``SimEngine``) is three methods:
+The contract (``SimEngine``) is the staging methods plus two drivers:
 
     rec = eng.add_bcast(members, nbytes)     # stage a one-to-many SEND
     rec = eng.add_write(members, nbytes)     # stage a one-to-many WRITE
     rec = eng.add_unicast(src, dst, nbytes)  # stage a plain RC transfer
     eng.run()                                # drive staged ops to done
+    eng.run_many([stage_a, stage_b, ...])    # batched scenarios
+
+``run_many`` is the stage-then-batch API: each scenario callable stages
+ops on the engine, and all scenarios are then driven as INDEPENDENT
+experiments (no cross-scenario bandwidth sharing).  The flow engine
+solves every scenario in one vmapped executable
+(``flowsim_jax.solve_many``); the packet engine falls back to running
+them serially on its shared clock.  Benchmarks sweeping a parameter
+(message size, group scale, loss rate) should stage the whole sweep and
+make ONE ``run_many`` call.
 
 Each ``add_*`` returns a ``metrics.MsgRecord``; after ``run()`` the
 record carries per-receiver delivery times and the sender CQE time, so
@@ -43,8 +53,8 @@ ACK clocking) exist only in the packet engine.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
-    runtime_checkable
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, \
+    Tuple, runtime_checkable
 
 from repro.core import packet as pk
 from repro.core.fattree import Topology
@@ -80,6 +90,17 @@ class SimEngine(Protocol):
 
     def run(self, timeout: float = 30.0) -> float:
         """Drive every staged operation to completion; returns sim time."""
+        ...
+
+    def run_many(self, scenarios: Sequence[Callable[["SimEngine"], None]],
+                 timeout: float = 30.0) -> List[float]:
+        """Stage-then-batch: each callable stages ops on this engine;
+        all scenarios then run without sharing bandwidth with each
+        other.  Returns the engine clock at each scenario's completion
+        — backend-specific (the flow engine starts every scenario at
+        the current ``now``; the packet engine runs them back-to-back,
+        so its values accumulate).  Compute metrics from the records
+        (relative to their ``t_submit``), not from these values."""
         ...
 
 
@@ -203,6 +224,17 @@ class PacketEngine:
                 break                           # stalled or out of budget
         return sim.now
 
+    def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0
+                 ) -> List[float]:
+        """Serial fallback: scenarios run back-to-back on the shared
+        packet clock (groups/QPs are reused across scenarios; records
+        still measure relative to their own ``t_submit``)."""
+        ends = []
+        for stage in scenarios:
+            stage(self)
+            ends.append(self.run(timeout))
+        return ends
+
 
 # ============================================================= flow engine
 
@@ -248,6 +280,7 @@ class FlowEngine:
         self.name = "flow" if use_jax else "flow-np"
         self._sim = self._sim_cls(topo)          # LinkMap + solver
         self._staged: List[tuple] = []           # (links, volume, rec, info)
+        self._lat_memo: Dict[tuple, Tuple[float, float]] = {}
         self._next_msg = 0
         self.now = 0.0
 
@@ -260,14 +293,18 @@ class FlowEngine:
         Delivery latency counts every hop's propagation plus one
         segment's store-and-forward serialization at each hop after the
         first (the first serialization is part of the message wire time).
+        Memoized over the LinkMap's cached link ids — large-scale
+        staging revisits the same (src, dst) pairs constantly.
         """
-        prop, sf = 0.0, 0.0
-        for i, hop in enumerate(self.topo.path_links(src, dst, key)):
-            link = self.topo.links[hop]
-            prop += link.delay
-            if i > 0:
-                sf += seg_wire / link.bw
-        return prop + sf, prop
+        memo = self._lat_memo.get((src, dst, seg_wire, key))
+        if memo is None:
+            sim = self._sim
+            ids = sim.unicast_links(src, dst, key)
+            prop = float(sum(sim.delay[i] for i in ids))
+            sf = float(sum(seg_wire / sim.cap[i] for i in ids[1:]))
+            memo = self._lat_memo[(src, dst, seg_wire, key)] = \
+                (prop + sf, prop)
+        return memo
 
     # ----------------------------------------------------------- protocol
 
@@ -314,6 +351,18 @@ class FlowEngine:
         lat, prop = self._path_latency(src, dst, seg, key)
         return self._stage(links, wire_bytes(nbytes), rec, {dst: lat}, prop)
 
+    def _backfill(self, staged, flows, t0: float) -> float:
+        """Turn solver completion times into record bookkeeping;
+        returns the scenario's end time (latest sender CQE)."""
+        end = t0
+        for f, (_, _, rec, deliver, back) in zip(flows, staged):
+            for m, lat in deliver.items():
+                rec.t_deliver[m] = t0 + f.done_t + lat
+            rec.t_sender_cqe = (max(rec.t_deliver.values()) + back
+                                if deliver else t0 + f.done_t)
+            end = max(end, rec.t_sender_cqe)
+        return end
+
     def run(self, timeout: float = 30.0) -> float:
         if not self._staged:
             return self.now
@@ -322,15 +371,43 @@ class FlowEngine:
         flows = [sim.add(links, volume)
                  for links, volume, _, _, _ in self._staged]
         sim.run()
-        t0 = self.now
-        for f, (_, _, rec, deliver, back) in zip(flows, self._staged):
-            for m, lat in deliver.items():
-                rec.t_deliver[m] = t0 + f.done_t + lat
-            rec.t_sender_cqe = (max(rec.t_deliver.values()) + back
-                                if deliver else t0 + f.done_t)
-            self.now = max(self.now, rec.t_sender_cqe)
+        self.now = max(self.now, self._backfill(self._staged, flows,
+                                                self.now))
         self._staged = []
         return self.now
+
+    def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0
+                 ) -> List[float]:
+        """Batched scenarios: every scenario is an isolated fabric (no
+        cross-scenario bandwidth sharing) whose clock starts at the
+        engine's current ``now``.  On the JAX solver the whole batch is
+        ONE vmapped solve (``solve_many``); the numpy solver falls back
+        to per-scenario solves.  Returns per-scenario end times; the
+        engine clock advances to the latest one."""
+        if self._staged:
+            raise RuntimeError("pending staged ops; run() them first or "
+                               "stage them inside a scenario")
+        sim = self._sim
+        t0 = self.now
+        metas = []
+        for stage in scenarios:
+            stage(self)
+            metas.append(self._staged)
+            self._staged = []
+        sim.flows, sim.now = [], 0.0
+        epoch_flows = [[sim.add(links, volume)
+                        for links, volume, _, _, _ in meta]
+                       for meta in metas]
+        if hasattr(sim, "solve_many"):           # vmapped batch (JAX)
+            sim.solve_many(epoch_flows)
+        else:                                    # numpy: epoch-serial
+            for flows in epoch_flows:
+                sim.flows, sim.now = flows, 0.0
+                sim.run()
+        ends = [self._backfill(meta, flows, t0)
+                for meta, flows in zip(metas, epoch_flows)]
+        self.now = max([self.now] + ends)
+        return ends
 
 
 # ================================================================= factory

@@ -24,7 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +46,10 @@ class Topology:
     # and tolerates a small cache.  ~150B per dict entry, measured.
     DIST_CACHE_BYTES = 256 << 20
     _DIST_ENTRY_BYTES = 150
+    # candidate_ports memo entries are one small list each (~100B);
+    # bounded so 16k-host staging (every (hop node, dst) pair on every
+    # routed path) cannot grow the memo without limit
+    CAND_CACHE_ENTRIES = 1 << 21
 
     def __init__(self):
         self.ports: Dict[str, Dict[int, Tuple[str, int]]] = {}
@@ -51,6 +57,8 @@ class Topology:
         self.hosts: List[str] = []
         self.switches: List[str] = []
         self._dist: "OrderedDict[str, Dict[str, int]]" = OrderedDict()
+        self._cand: Dict[Tuple[str, str], List[int]] = {}
+        self._csr: Optional[tuple] = None       # (names, index, indptr, nbrs)
 
     # ------------------------------------------------------------ building
 
@@ -70,21 +78,56 @@ class Topology:
         self.links[(a, pa)] = Link(bw, delay)
         self.links[(b, pb)] = Link(bw, delay)
         self._dist.clear()
+        self._cand.clear()
+        self._csr = None
 
     # ------------------------------------------------------------ routing
 
+    def _adjacency(self):
+        """CSR adjacency over integer node ids, built lazily.
+
+        One BFS per destination is the staging hot path of large-scale
+        flow batches (a 16k-host fat tree eventually BFSes every host);
+        walking the per-node port dicts in Python is ~10x slower than
+        level-synchronous numpy sweeps over this CSR form.
+        """
+        if self._csr is None:
+            names = list(self.ports)
+            index = {n: i for i, n in enumerate(names)}
+            indptr = np.zeros(len(names) + 1, np.int32)
+            for i, n in enumerate(names):
+                indptr[i + 1] = indptr[i] + len(self.ports[n])
+            nbrs = np.empty(indptr[-1], np.int32)
+            k = 0
+            for n in names:
+                for _, (peer, _) in self.ports[n].items():
+                    nbrs[k] = index[peer]
+                    k += 1
+            self._csr = (names, index, indptr, nbrs)
+        return self._csr
+
     def _bfs(self, dst: str) -> Dict[str, int]:
-        dist = {dst: 0}
-        frontier = [dst]
-        while frontier:
-            nxt = []
-            for n in frontier:
-                for p, (peer, _) in self.ports[n].items():
-                    if peer not in dist:
-                        dist[peer] = dist[n] + 1
-                        nxt.append(peer)
-            frontier = nxt
-        return dist
+        """Level-synchronous numpy BFS.  Unreachable nodes get -1 (the
+        builders only produce connected topologies)."""
+        names, index, indptr, nbrs = self._adjacency()
+        dist = np.full(len(names), -1, np.int32)
+        frontier = np.asarray([index[dst]], np.int32)
+        dist[frontier] = 0
+        d = 0
+        while frontier.size:
+            d += 1
+            # gather all neighbors of the frontier in one CSR sweep
+            starts, ends = indptr[frontier], indptr[frontier + 1]
+            counts = ends - starts
+            rel = np.arange(int(counts.sum()), dtype=np.int32) \
+                - np.repeat(np.cumsum(counts) - counts, counts)
+            cand = nbrs[np.repeat(starts, counts) + rel]
+            cand = cand[dist[cand] < 0]
+            if not cand.size:
+                break
+            dist[cand] = d
+            frontier = np.flatnonzero(dist == d).astype(np.int32)
+        return dict(zip(names, dist.tolist()))
 
     def _dist_cache_cap(self) -> int:
         """Max cached distance maps within the memory budget (>= 64)."""
@@ -103,12 +146,25 @@ class Topology:
         return d[node]
 
     def candidate_ports(self, node: str, dst: str) -> List[int]:
-        """All ports on shortest paths node -> dst (the ECMP set)."""
+        """All ports on shortest paths node -> dst (the ECMP set).
+
+        Memoized: staging a large-scale flow batch walks the same
+        (intermediate node, destination) pairs from many sources, and
+        each uncached call costs one ``dist`` lookup per port.
+        """
         if node == dst:
             return []
-        d = self.dist(node, dst)
-        return [p for p, (peer, _) in sorted(self.ports[node].items())
+        memo = self._cand.get((node, dst))
+        if memo is None:
+            d = self.dist(node, dst)
+            if d < 0:
+                raise ValueError(f"{dst!r} is unreachable from {node!r}")
+            if len(self._cand) >= self.CAND_CACHE_ENTRIES:
+                self._cand.clear()              # coarse, rarely hit
+            memo = self._cand[(node, dst)] = [
+                p for p, (peer, _) in sorted(self.ports[node].items())
                 if self.dist(peer, dst) == d - 1]
+        return memo
 
     def next_hop_port(self, node: str, dst: str, flow_key: int = 0) -> int:
         cands = self.candidate_ports(node, dst)

@@ -52,11 +52,20 @@ class LinkMap:
             delays.append(link.delay)
         self.cap = np.asarray(caps, float)
         self.delay = np.asarray(delays, float)
+        self._path_memo: Dict[Tuple[str, str, int], Tuple[int, ...]] = {}
 
     def unicast_links(self, src: str, dst: str, key: int = 0):
-        """Directed link ids along the ECMP unicast path src -> dst."""
-        return tuple(self.link_id[hop]
-                     for hop in self.topo.path_links(src, dst, key))
+        """Directed link ids along the ECMP unicast path src -> dst.
+
+        Memoized: large-scale staging (fig14 meshes both tree links AND
+        per-receiver latency paths) asks for the same pair repeatedly.
+        """
+        memo = self._path_memo.get((src, dst, key))
+        if memo is None:
+            memo = self._path_memo[(src, dst, key)] = tuple(
+                self.link_id[hop]
+                for hop in self.topo.path_links(src, dst, key))
+        return memo
 
     def multicast_tree_links(self, src: str, members: Sequence[str],
                              key: int = 0):
@@ -73,11 +82,20 @@ class LinkMap:
 
 @dataclasses.dataclass
 class Flow:
+    """One staged flow.  ``volume`` is the STAGED byte count and is
+    never mutated by the solvers — metrics and re-run inspection rely
+    on it; ``remaining`` is the solver's working countdown."""
+
     links: Tuple[int, ...]          # directed link ids
-    volume: float                   # bytes remaining
+    volume: float                   # bytes staged (immutable after add)
+    remaining: float = -1.0         # bytes left to serve (solver state)
     done_t: float = -1.0
     rate: float = 0.0
     tag: object = None
+
+    def __post_init__(self):
+        if self.remaining < 0.0:
+            self.remaining = self.volume
 
 
 class FlowSim(LinkMap):
@@ -135,13 +153,14 @@ class FlowSim(LinkMap):
         active = [f for f in self.flows if f.done_t < 0]
         while active:
             self._allocate(active)
-            dt = min(f.volume / f.rate for f in active)
+            dt = min(f.remaining / f.rate for f in active)
             self.now += dt
             still = []
             for f in active:
-                f.volume -= f.rate * dt
-                if f.volume <= 1e-6 * max(f.rate, 1.0):
+                f.remaining -= f.rate * dt
+                if f.remaining <= 1e-6 * max(f.rate, 1.0):
                     f.done_t = self.now
+                    f.remaining = 0.0
                 else:
                     still.append(f)
             active = still

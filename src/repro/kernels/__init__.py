@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# maxmin.py is the simulator-core hot-spot: the fused progressive-
+# filling round behind the flow engine (core/flowsim_jax.py), with its
+# pure-jnp oracle in ref.py next to the attention/SSD oracles.

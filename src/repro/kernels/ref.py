@@ -12,6 +12,37 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def maxmin_round_reference(flow_links, frozen, rates, cap_rem):
+    """One progressive-filling round of max-min fair allocation.
+
+    The oracle for ``kernels/maxmin.py`` — plain jnp, materializing every
+    intermediate the fused kernel is allowed to keep on-chip.
+
+    flow_links (F, H) int32 link ids padded with the sentinel (last)
+    index of ``cap_rem``; frozen (F,) 0/1 mask in cap dtype (padding
+    rows enter frozen); rates (F,); cap_rem (L+1,) with cap_rem[-1]=inf.
+    Returns the round's (rates, frozen, cap_rem).
+    """
+    n_caps = cap_rem.shape[0]
+    dtype = cap_rem.dtype
+    live = 1.0 - frozen
+    # per-link demand: scatter every live flow onto its links
+    cnt = jnp.zeros(n_caps, dtype).at[flow_links].add(
+        jnp.broadcast_to(live[:, None], flow_links.shape))
+    share = jnp.where(cnt > 0.0, cap_rem / jnp.maximum(cnt, 1.0), jnp.inf)
+    # each flow's tightest link share (sentinel gathers inf)
+    tightest = jnp.min(share[flow_links], axis=1)
+    limit = jnp.where(frozen > 0.5, jnp.inf, tightest)
+    b = jnp.min(limit)
+    newly = (frozen < 0.5) & (limit <= b * (1.0 + 1e-6))
+    newf = newly.astype(dtype)
+    rates = jnp.where(newly, b, rates)
+    used = jnp.zeros(n_caps, dtype).at[flow_links].add(
+        jnp.broadcast_to((newf * b)[:, None], flow_links.shape))
+    cap_rem = jnp.maximum(cap_rem - used, 0.0)
+    return rates, jnp.minimum(frozen + newf, 1.0), cap_rem
+
+
 def mha_reference(q, k, v, *, causal: bool, window: int = 0):
     """Multi-head attention oracle. q (B,Sq,H,D); k,v (B,Skv,KVH,D).
     GQA: H = KVH * rep.  window > 0 = sliding window (causal band)."""

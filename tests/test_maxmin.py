@@ -1,0 +1,342 @@
+"""The fused max-min solver stack (kernels/maxmin.py + flowsim_jax.py).
+
+- property-style randomized agreement: the Pallas kernel (interpret
+  mode, so it runs on any backend) against the numpy ``FlowSim``
+  progressive filling, on randomized topologies and flow sets, to 0.1%;
+- shape bucketing: two sweep points in the same (F, H) bucket must hit
+  the jit cache (no recompile);
+- float64 auto-promotion once volumes exceed the float32 safe-integer
+  range, pinned against a float64 numpy reference;
+- ``run_many`` batched scenarios == serial runs on fresh engines;
+- solvers never clobber the staged ``Flow.volume``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import fattree
+from repro.core.engine import make_engine
+from repro.core.flowsim import FlowSim
+
+jax = pytest.importorskip("jax")
+jnp = jax.numpy
+
+from repro.core import flowsim_jax                     # noqa: E402
+from repro.core.flowsim_jax import JaxFlowSim, _bucket, _solver  # noqa: E402
+from repro.kernels import maxmin                       # noqa: E402
+from repro.kernels.ref import maxmin_round_reference   # noqa: E402
+
+
+def _jit_cache_size() -> int:
+    """Compiled-shape count of the solver flavor ``run()`` dispatches."""
+    return _solver(False, maxmin._resolve_mode())._cache_size()
+
+
+def small_fat_tree():
+    """8 hosts, heterogeneous tiers — interesting max-min contention."""
+    return fattree.fat_tree(n_pods=2, leaves_per_pod=2, hosts_per_leaf=2,
+                            aggs_per_pod=2, bw=100 * fattree.GBPS)
+
+
+def random_flows(rng, sim, n_lo=3, n_hi=12):
+    """Random mix of unicast paths and multicast trees with volumes."""
+    hosts = list(sim.topo.hosts)
+    out = []
+    for _ in range(int(rng.integers(n_lo, n_hi + 1))):
+        key = int(rng.integers(0, 4))
+        if rng.random() < 0.5:
+            src, dst = (str(h) for h in
+                        rng.choice(hosts, 2, replace=False))
+            links = sim.unicast_links(src, dst, key)
+        else:
+            k = int(rng.integers(2, min(6, len(hosts)) + 1))
+            members = [str(h) for h in rng.choice(hosts, k, replace=False)]
+            links = sim.multicast_tree_links(members[0], members, key)
+        out.append((links, float(rng.uniform(1e5, 5e6))))
+    return out
+
+
+def pack_links(flows, n_links):
+    """(F, H) sentinel-padded link-id matrix like the solver builds."""
+    h = max(len(links) for links, _ in flows)
+    fl = np.full((len(flows), h), n_links, np.int32)
+    for i, (links, _) in enumerate(flows):
+        fl[i, :len(links)] = links
+    return fl
+
+
+# =============================================== kernel vs numpy filling
+
+@pytest.mark.parametrize("seed", range(5))
+def test_pallas_kernel_matches_numpy_filling(seed):
+    """ISSUE acceptance: interpret-mode kernel rates agree with the
+    numpy FlowSim progressive filling within 0.1% on random cases."""
+    rng = np.random.default_rng(seed)
+    topo = small_fat_tree() if seed % 2 else fattree.fig4()
+    ref_sim = FlowSim(topo)
+    flows = random_flows(rng, ref_sim)
+    staged = [ref_sim.add(links, vol) for links, vol in flows]
+    ref_sim._allocate(staged)
+    want = np.asarray([f.rate for f in staged])
+
+    fl = pack_links(flows, len(ref_sim.cap))
+    cap = np.append(ref_sim.cap, np.inf).astype(np.float32)
+    active = np.ones(len(flows), bool)
+    got = np.asarray(maxmin.maxmin_rates(
+        jnp.asarray(fl), jnp.asarray(cap), jnp.asarray(active),
+        mode="interpret", block_f=8))
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_kernel_round_matches_reference_exactly():
+    """One fused round == the jnp oracle, including freeze/cap state."""
+    rng = np.random.default_rng(7)
+    F, H, L = 23, 4, 17
+    links = rng.integers(0, L, (F, H)).astype(np.int32)
+    for i in range(F):                     # ragged link lists
+        links[i, int(rng.integers(1, H + 1)):] = L
+    cap = np.append(rng.uniform(1.0, 10.0, L), np.inf).astype(np.float32)
+    frozen = (rng.random(F) < 0.3).astype(np.float32)
+    rates = np.zeros(F, np.float32)
+    want = maxmin_round_reference(jnp.asarray(links), jnp.asarray(frozen),
+                                  jnp.asarray(rates), jnp.asarray(cap))
+    got = maxmin.maxmin_round_pallas(
+        jnp.asarray(links), jnp.asarray(frozen), jnp.asarray(rates),
+        jnp.asarray(cap), block_f=8, interpret=True)
+    for g, w, name in zip(got, want, ("rates", "frozen", "cap_rem")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, err_msg=name)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_jax_sim_completion_times_match_numpy(seed):
+    """Full event loop (epochs + warm start) vs numpy FlowSim, 0.1%."""
+    rng = np.random.default_rng(100 + seed)
+    topo = small_fat_tree()
+    sim_np, sim_jx = FlowSim(topo), JaxFlowSim(topo)
+    flows = random_flows(rng, sim_np)
+    fn = [sim_np.add(links, vol) for links, vol in flows]
+    fj = [sim_jx.add(links, vol) for links, vol in flows]
+    sim_np.run()
+    sim_jx.run()
+    done_np = np.asarray([f.done_t for f in fn])
+    done_jx = np.asarray([f.done_t for f in fj])
+    np.testing.assert_allclose(done_jx, done_np, rtol=1e-3)
+
+
+# ======================================================= shape bucketing
+
+def test_bucket_is_pow2_with_floor():
+    assert _bucket(1, 16) == 16
+    assert _bucket(16, 16) == 16
+    assert _bucket(17, 16) == 32
+    assert _bucket(1984, 16) == 2048
+    assert _bucket(3, 8) == 8
+
+
+def test_same_bucket_hits_jit_cache():
+    """Two sweep points in one (F, H) bucket must NOT recompile."""
+    topo = fattree.testbed(n_hosts=8)
+
+    def solve(n_flows):
+        sim = JaxFlowSim(topo)
+        for i in range(n_flows):
+            sim.add(sim.unicast_links("h0", f"h{1 + i % 7}", key=i),
+                    1e6 + i)
+        sim.run()
+
+    solve(17)                               # F bucket 32
+    before = _jit_cache_size()
+    solve(25)                               # same bucket -> cache hit
+    assert _jit_cache_size() == before
+    solve(40)                               # F bucket 64 -> one compile
+    assert _jit_cache_size() == before + 1
+
+
+def test_unbucketed_mode_recompiles_per_shape():
+    """The PR-1 behavior is still reachable (bench A/B) and differs."""
+    topo = fattree.testbed(n_hosts=8)
+
+    def solve(n_flows):
+        sim = JaxFlowSim(topo)
+        sim.bucketing = False
+        for i in range(n_flows):
+            sim.add(sim.unicast_links("h0", f"h{1 + i % 7}"), 1e6)
+        sim.run()
+
+    solve(18)
+    before = _jit_cache_size()
+    solve(19)                               # exact shapes -> recompile
+    assert _jit_cache_size() == before + 1
+
+
+def test_mode_override_not_stale_after_compile(monkeypatch):
+    """REPRO_MAXMIN set AFTER a bucket compiled must still take effect
+    (the kernel mode is part of the jit cache key, not baked into a
+    stale executable)."""
+    topo = fattree.testbed()
+    sim = JaxFlowSim(topo)
+    sim.add(sim.unicast_links("h0", "h1"), 1e6)
+    sim.run()
+    want = sim.flows[0].done_t
+    monkeypatch.setenv("REPRO_MAXMIN", "interpret")
+    before = _solver(False, "interpret")._cache_size()
+    sim2 = JaxFlowSim(topo)
+    sim2.add(sim2.unicast_links("h0", "h1"), 1e6)
+    sim2.run()
+    assert _solver(False, "interpret")._cache_size() == before + 1
+    assert sim2.flows[0].done_t == pytest.approx(want, rel=1e-5)
+
+
+# ==================================================== float64 promotion
+
+def test_small_volumes_solve_in_float32():
+    sim = JaxFlowSim(fattree.testbed())
+    sim.add(sim.unicast_links("h0", "h1"), 1 << 20)
+    sim.run()
+    assert sim.solve_dtype == np.float32
+
+
+def test_large_volumes_auto_promote_to_float64():
+    """Multi-GB volumes (fig12/13 regime) pin the f64 path: dtype
+    selection + agreement with a float64 numpy reference at 1e-9 —
+    beyond float32's ~6e-8 representation error."""
+    topo = fattree.testbed()
+    sim_jx, sim_np = JaxFlowSim(topo), FlowSim(topo)
+    rng = np.random.default_rng(3)
+    pairs = [("h0", "h1"), ("h0", "h2"), ("h1", "h3"), ("h2", "h3")]
+    fj, fn = [], []
+    for i, (a, b) in enumerate(pairs):
+        vol = float(2 << 30) * (1.0 + float(rng.uniform(0, 0.5)))
+        fj.append(sim_jx.add(sim_jx.unicast_links(a, b), vol))
+        fn.append(sim_np.add(sim_np.unicast_links(a, b), vol))
+    sim_jx.run()
+    sim_np.run()
+    assert sim_jx.solve_dtype == np.float64
+    np.testing.assert_allclose([f.done_t for f in fj],
+                               [f.done_t for f in fn], rtol=1e-9)
+
+
+def test_f32_boundary_is_safe_integer_range():
+    sim = JaxFlowSim(fattree.testbed())
+    sim.add(sim.unicast_links("h0", "h1"), flowsim_jax.F32_SAFE_MAX)
+    sim.run()
+    assert sim.solve_dtype == np.float32
+    sim2 = JaxFlowSim(fattree.testbed())
+    sim2.add(sim2.unicast_links("h0", "h1"),
+             flowsim_jax.F32_SAFE_MAX * 1.01)
+    sim2.run()
+    assert sim2.solve_dtype == np.float64
+
+
+# ================================================= run_many / solve_many
+
+def _stage_pair(recs):
+    def a(eng):
+        recs.append(eng.add_bcast(["h0", "h1", "h2"], 1 << 20))
+
+    def b(eng):
+        recs.append(eng.add_bcast(["h0", "h3", "h4"], 2 << 20))
+        recs.append(eng.add_unicast("h1", "h2", 1 << 20))
+    return [a, b]
+
+
+@pytest.mark.parametrize("engine", ["flow", "flow-np"])
+def test_run_many_matches_serial_fresh_engines(engine):
+    recs: list = []
+    eng = make_engine(engine, fattree.testbed(n_hosts=5))
+    ends = eng.run_many(_stage_pair(recs))
+    assert len(ends) == 2
+    got = [recs[0].jct(2), recs[1].jct(2), recs[2].jct(1)]
+
+    e1 = make_engine(engine, fattree.testbed(n_hosts=5))
+    r1 = e1.add_bcast(["h0", "h1", "h2"], 1 << 20)
+    e1.run()
+    e2 = make_engine(engine, fattree.testbed(n_hosts=5))
+    r2 = e2.add_bcast(["h0", "h3", "h4"], 2 << 20)
+    r3 = e2.add_unicast("h1", "h2", 1 << 20)
+    e2.run()
+    want = [r1.jct(2), r2.jct(2), r3.jct(1)]
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_run_many_scenarios_are_isolated():
+    """Identical scenarios staged together must NOT share bandwidth:
+    each must match its solo JCT (unlike one run() batch, which halves
+    the shared sender link)."""
+    members = ["h0", "h1", "h2", "h3"]
+    solo_eng = make_engine("flow", fattree.testbed())
+    solo = solo_eng.add_bcast(members, 1 << 20)
+    solo_eng.run()
+    eng = make_engine("flow", fattree.testbed())
+    recs = []
+    eng.run_many([lambda e: recs.append(e.add_bcast(members, 1 << 20)),
+                  lambda e: recs.append(e.add_bcast(members, 1 << 20))])
+    for r in recs:
+        assert r.jct(3) == pytest.approx(solo.jct(3), rel=1e-6)
+
+
+def test_run_many_heterogeneous_epochs_split_batches():
+    """A unicast-mesh epoch (many flows, short paths) next to a
+    multicast epoch (few flows, long link lists) exercises the batch
+    planner; results must still match serial runs."""
+    topo = small_fat_tree()
+    hosts = topo.hosts
+    eng = make_engine("flow", topo)
+    mesh_recs: list = []
+    tree_recs: list = []
+
+    def mesh(e):
+        for i, a in enumerate(hosts):
+            for b in hosts[i + 1:]:
+                mesh_recs.append(e.add_unicast(a, b, 1 << 18, key=i))
+
+    def tree(e):
+        tree_recs.append(e.add_bcast(list(hosts), 4 << 20))
+
+    eng.run_many([mesh, tree])
+    e1 = make_engine("flow", small_fat_tree())
+    ref_recs: list = []
+    for i, a in enumerate(hosts):
+        for b in hosts[i + 1:]:
+            ref_recs.append(e1.add_unicast(a, b, 1 << 18, key=i))
+    e1.run()
+    e2 = make_engine("flow", small_fat_tree())
+    rt = e2.add_bcast(list(hosts), 4 << 20)
+    e2.run()
+    got = [r.jct(1) for r in mesh_recs] + [tree_recs[0].jct(len(hosts) - 1)]
+    want = [r.jct(1) for r in ref_recs] + [rt.jct(len(hosts) - 1)]
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_run_many_rejects_pending_staged_ops():
+    eng = make_engine("flow", fattree.testbed())
+    eng.add_bcast(["h0", "h1"], 1 << 20)
+    with pytest.raises(RuntimeError):
+        eng.run_many([lambda e: None])
+
+
+def test_packet_engine_run_many_serial_fallback():
+    eng = make_engine("packet", fattree.testbed())
+    recs: list = []
+    ends = eng.run_many(
+        [lambda e: recs.append(e.add_bcast(["h0", "h1", "h2"], 64 << 10)),
+         lambda e: recs.append(e.add_unicast("h0", "h3", 64 << 10))])
+    assert len(ends) == 2 and ends[1] >= ends[0]
+    assert recs[0].jct(2) != float("inf")
+    assert recs[1].jct(1) != float("inf")
+
+
+# ===================================================== volume integrity
+
+@pytest.mark.parametrize("cls", [FlowSim, JaxFlowSim])
+def test_solvers_preserve_staged_volume(cls):
+    """ISSUE bugfix: run() must record completion via done_t/remaining
+    WITHOUT destroying the staged volume."""
+    sim = cls(fattree.testbed())
+    f = sim.add(sim.unicast_links("h0", "h1"), 1 << 20)
+    sim.run()
+    assert f.volume == float(1 << 20)
+    assert f.remaining == 0.0
+    assert f.done_t > 0.0

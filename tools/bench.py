@@ -1,0 +1,226 @@
+#!/usr/bin/env python3
+"""Flow-solver performance tracking — writes BENCH_flowsim.json.
+
+Times the fixed fig14 workload (HPL scales 8/16/32 on the flow engine,
+1024-host fat-tree) through two solver paths, each in its OWN
+subprocess so neither warms the other's topology/routing/jit caches:
+
+- **before** — the PR-1 solver discipline: one engine + one solve per
+  scenario, shape bucketing off, fresh topology per scenario, no
+  persistent compilation cache (PR-1 recompiled every process);
+- **after**  — the stage-then-batch path: the whole sweep staged on one
+  engine, solved by a single ``run_many`` (shape-bucketed, vmapped
+  epoch batches), persistent compilation cache on.  Measured twice:
+  a cold process with an empty cache directory, then a second fresh
+  process against the now-warm directory (the steady state every run
+  after the first sees).
+
+Every measurement is the sweep wall-clock around ``fig14_scale.run()``
+(imports excluded — the same basis as the time fig14 prints).  Inside
+each subprocess the sweep runs twice; pass2 hits the in-process jit
+cache, so ``pass1 - pass2`` estimates compile cost, and the solver's
+own device time (``flowsim_jax.SOLVE_STATS``) splits python staging
+from solve.
+
+``--before-git REF`` additionally times the ACTUAL code at a git ref
+(e.g. the PR-1 commit) via ``git archive``, same basis, for a
+ground-truth baseline.
+
+    PYTHONPATH=src python tools/bench.py                     # full
+    PYTHONPATH=src python tools/bench.py --before-git HEAD~1 # + git ref
+    PYTHONPATH=src python tools/bench.py --smoke             # CI-sized
+
+``--smoke`` shrinks the workload (one small scale, batched path only)
+and still writes the json — CI uses it to catch perf-path regressions
+(import errors, recompile storms) rather than to produce numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+DEFAULT_SCALES = (8, 16, 32)
+
+# the 'before' baselines must really run without a persistent
+# compilation cache, even when the surrounding shell (e.g. CI) exports
+# one — PR-1 recompiled every process
+_JAX_CACHE_VARS = ("JAX_COMPILATION_CACHE_DIR",
+                   "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS")
+
+
+# ----------------------------------------------------- child measurement
+
+def _timed_sweep(scales, batched: bool, bucketing: bool) -> dict:
+    """One fig14 sweep in-process; wall/solve/python split + shapes."""
+    from benchmarks import fig14_scale
+    from repro.core import flowsim_jax
+
+    prev = flowsim_jax.JaxFlowSim.bucketing
+    flowsim_jax.JaxFlowSim.bucketing = bucketing
+    flowsim_jax.reset_solve_stats()
+    rows: list = []
+    t0 = time.perf_counter()
+    try:
+        fig14_scale.run(rows, engine="flow", scales=scales,
+                        batched=batched)
+    finally:
+        flowsim_jax.JaxFlowSim.bucketing = prev
+    wall = time.perf_counter() - t0
+    stats = dict(flowsim_jax.SOLVE_STATS)
+    return {
+        "wall_s": round(wall, 4),
+        "solve_s": round(stats["solve_s"], 4),
+        "python_s": round(wall - stats["solve_s"], 4),
+        "solve_calls": stats["calls"],
+        "solve_shapes": [list(s) for s in stats["shapes"]],
+        "rows": [[n, round(v, 4)] for n, v, _ in rows],
+    }
+
+
+def _child_main(kind: str, scales) -> int:
+    """Two passes: pass1 pays compilation, pass2 hits the jit cache."""
+    if kind == "serial":
+        # PR-1 discipline also rebuilt the topology on every scenario
+        # call (no lru_cache); bypass the cache to reproduce that
+        from benchmarks import fig14_scale
+        fig14_scale._build = fig14_scale._build.__wrapped__
+    batched = kind == "batched"
+    p1 = _timed_sweep(scales, batched, bucketing=batched)
+    p2 = _timed_sweep(scales, batched, bucketing=batched)
+    print(json.dumps({
+        "pass1": p1,
+        "pass2": p2,
+        "compile_est_s": round(max(p1["wall_s"] - p2["wall_s"], 0.0), 4),
+    }))
+    return 0
+
+
+# ---------------------------------------------------- parent orchestration
+
+def _run_child(kind: str, scales, env_extra: dict) -> dict:
+    env = dict(os.environ, **env_extra)
+    env = {k: v for k, v in env.items() if v != ""}   # "" = unset
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--_child", kind,
+         "--scales", ",".join(str(s) for s in scales)],
+        capture_output=True, text=True, env=env, cwd=REPO, check=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _run_git_ref(ref: str, scales) -> dict:
+    """Time the sweep of the ACTUAL tree at ``ref``, same basis as the
+    in-tree measurements (wall around ``fig14_scale.run()``, imports
+    excluded) and the same ``scales``."""
+    tmp = tempfile.mkdtemp(prefix="bench-ref-")
+    driver = (
+        "import sys, time\n"
+        "sys.path.insert(0, 'src')\n"
+        "from benchmarks import fig14_scale\n"
+        "rows = []\n"
+        "t0 = time.perf_counter()\n"
+        f"fig14_scale.run(rows, engine='flow', scales={tuple(scales)!r})\n"
+        "print('sweep done in %.4fs' % (time.perf_counter() - t0))\n")
+    try:
+        tar = subprocess.run(["git", "archive", ref], cwd=REPO,
+                             capture_output=True, check=True)
+        subprocess.run(["tar", "-x", "-C", tmp], input=tar.stdout,
+                       check=True)
+        walls = []
+        env = dict(os.environ, REPRO_JAX_CACHE="0")
+        for k in ("PYTHONPATH", *_JAX_CACHE_VARS):
+            env.pop(k, None)
+        for _ in range(2):
+            out = subprocess.run([sys.executable, "-c", driver],
+                                 capture_output=True, text=True,
+                                 env=env, cwd=tmp, check=True)
+            m = re.search(r"done in ([0-9.]+)s", out.stdout)
+            walls.append(float(m.group(1)) if m else -1.0)
+        return {"ref": ref, "wall_s": walls}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: one small scale, batched path only")
+    ap.add_argument("--scales", default=None,
+                    help="comma-separated sweep scales "
+                         f"(default {DEFAULT_SCALES})")
+    ap.add_argument("--before-git", default=None, metavar="REF",
+                    help="also time the actual tree at a git ref "
+                         "(ground-truth PR-1 baseline)")
+    ap.add_argument("--out", default=os.path.join(REPO,
+                                                  "BENCH_flowsim.json"))
+    ap.add_argument("--_child", default=None,
+                    choices=("batched", "serial"), help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    scales = tuple(int(s) for s in args.scales.split(",")) \
+        if args.scales else ((8,) if args.smoke else DEFAULT_SCALES)
+    if args._child:
+        return _child_main(args._child, scales)
+
+    result = {
+        "workload": {"figure": "fig14", "engine": "flow",
+                     "scales": list(scales), "smoke": args.smoke},
+        "env": {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+    }
+    t_all = time.perf_counter()
+    cache_dir = tempfile.mkdtemp(prefix="bench-jax-cache-")
+    try:
+        if not args.smoke:
+            # before: PR-1 solver discipline, no persistent cache
+            no_cache = {"REPRO_JAX_CACHE": "0",
+                        **{k: "" for k in _JAX_CACHE_VARS}}
+            result["before"] = _run_child("serial", scales, no_cache)
+            if args.before_git:
+                result["before_git"] = _run_git_ref(args.before_git,
+                                                    scales)
+        # after, cold: fresh process + empty compilation-cache dir
+        cache_env = {"JAX_COMPILATION_CACHE_DIR": cache_dir}
+        result["after_cold"] = _run_child("batched", scales, cache_env)
+        # after, steady state: fresh process, warm cache dir
+        result["after_warm"] = _run_child("batched", scales, cache_env)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    if "before" in result:
+        b = result["before"]["pass1"]["wall_s"]
+        result["speedup_cold"] = round(
+            b / result["after_cold"]["pass1"]["wall_s"], 2)
+        result["speedup_steady"] = round(
+            b / result["after_warm"]["pass1"]["wall_s"], 2)
+    result["bench_wall_s"] = round(time.perf_counter() - t_all, 2)
+
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+    if args.smoke:       # regression tripwires for CI
+        cold, warm = result["after_cold"], result["after_warm"]
+        assert cold["pass1"]["solve_calls"] > 0
+        assert cold["pass1"]["rows"], "sweep produced no rows"
+        same = cold["pass1"]["solve_shapes"] == \
+            warm["pass1"]["solve_shapes"]
+        assert same, "bucketed shapes changed between processes"
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
