@@ -3,18 +3,21 @@
 Every module reproduces one paper artifact and returns a list of CSV rows
 ``(name, value, derived)``; ``benchmarks.run`` orchestrates and prints.
 All simulations go through the backend-pluggable SimEngine layer
-(``core/engine.py``): ``engine="packet"`` runs the same packet-level
-event loop as the tests, ``engine="flow"`` the vectorized fluid model.
+(``core/engine.py``) and stage their operations as Workload-IR
+``GroupOp``s (``core/workload.py``): ``engine="packet"`` runs the same
+packet-level event loop as the tests, ``engine="flow"`` the vectorized
+fluid model — and ``transport=`` picks the strategy carrying the bytes
+(``gleam`` vs the §2.3 overlays), on EITHER engine.
 """
 from __future__ import annotations
 
 from repro.core import fattree
-from repro.core.baselines import (BASELINE_KINDS, BinaryTreeBcast,
-                                  MultiUnicastBcast, RingBcast,
-                                  flow_baseline_jct)
+from repro.core.baselines import (BinaryTreeBcast, MultiUnicastBcast,
+                                  RingBcast)
 from repro.core.engine import make_engine
-from repro.core.gleam import GleamNetwork
+from repro.core.workload import GroupOp
 
+# legacy name -> transport mapping (pre-IR callers passed classes)
 BASELINES = {
     "multiunicast": MultiUnicastBcast,
     "ring": RingBcast,
@@ -23,9 +26,9 @@ BASELINES = {
 _KIND_OF = {v: k for k, v in BASELINES.items()}
 
 
-def gleam_bcast_jct(members, nbytes, *, topo=None, engine="packet",
-                    timeout=30.0, **net_kw):
-    """JCT of one Gleam multicast bcast on the chosen backend.
+def bcast_jct(members, nbytes, *, transport="gleam", topo=None,
+              engine="packet", chunks=8, timeout=30.0, **net_kw):
+    """JCT of one bcast over ``transport`` on the chosen backend.
 
     Returns ``(jct_seconds, engine, record)`` — callers that need
     backend internals (switch tables, retransmit counters) can reach
@@ -33,29 +36,29 @@ def gleam_bcast_jct(members, nbytes, *, topo=None, engine="packet",
     """
     eng = make_engine(engine, topo or fattree.testbed(n_hosts=len(members)),
                       **net_kw)
-    rec = eng.add_bcast(members, nbytes)
+    rec = eng.stage(GroupOp("bcast", tuple(members), nbytes,
+                            transport=transport, chunks=chunks))
     eng.run(timeout)
     return rec.jct(len(members) - 1), eng, rec
+
+
+def gleam_bcast_jct(members, nbytes, *, topo=None, engine="packet",
+                    timeout=30.0, **net_kw):
+    """JCT of one Gleam multicast bcast on the chosen backend."""
+    return bcast_jct(members, nbytes, transport="gleam", topo=topo,
+                     engine=engine, timeout=timeout, **net_kw)
 
 
 def baseline_bcast_jct(cls_or_kind, members, nbytes, *, topo=None, chunks=8,
                        engine="packet", timeout=30.0, **net_kw):
     """JCT of an overlay baseline bcast on the chosen backend.
 
-    ``cls_or_kind`` is a baseline class (packet path) or one of
-    ``BASELINE_KINDS``; returns ``(jct_seconds, engine_or_net, obj)``.
+    ``cls_or_kind`` is a baseline class (legacy) or one of
+    ``BASELINE_KINDS`` / transport names; both engines now lower the
+    transport through ``stage()``, so the same call works at packet
+    and fluid fidelity.  Returns ``(jct_seconds, engine, record)``.
     """
     kind = (_KIND_OF[cls_or_kind] if cls_or_kind in _KIND_OF
             else cls_or_kind)
-    assert kind in BASELINE_KINDS, kind
-    topo = topo or fattree.testbed(n_hosts=len(members))
-    if engine == "packet":
-        net = GleamNetwork(topo, **net_kw)
-        cls = BASELINES[kind]
-        b = cls(net, members, chunks=chunks) if cls is not MultiUnicastBcast \
-            else cls(net, members)
-        b.start(nbytes)
-        return b.run(timeout=timeout), net, b
-    eng = make_engine(engine, topo, **net_kw)
-    jct = flow_baseline_jct(eng, kind, members, nbytes, chunks=chunks)
-    return jct, eng, None
+    return bcast_jct(members, nbytes, transport=kind, topo=topo,
+                     engine=engine, chunks=chunks, timeout=timeout, **net_kw)

@@ -5,20 +5,26 @@ Paper claims (communication-only): PB -67%, RS(uniform) -18%,
 RS(centralized) -46%.  With computation included: -12% / -4.67% / -9.55%.
 
 Model: 4-node testbed; per-epoch panel volume decays linearly (§2.2).
-- PB: one-to-all bcast, source rotates per epoch (Appendix B).
+- PB: one-to-all bcast, source rotates per epoch (Appendix B).  The
+  HPL baseline is the same op over ``transport="ring"`` with chunks=1
+  (store-and-forward per hop) — one Workload IR declaration, two
+  transports.
 - RS: the `long` algorithm is a spread+exchange (bandwidth-optimal when
   data is uniform, degraded when centralized); with Gleam the owner
   multicasts its rows — volume independent of distribution.
 - Computation time is modeled per-epoch as compute-bound DGEMM time
   8x the uniform communication epoch (HPL is compute-dominated; the
   constant only scales the combined-JCT rows, not the comm-only rows).
+
+Each epoch is one Workload (an independent scenario: epochs run
+back-to-back, not concurrently), so the whole PB schedule is a single
+``run_workloads`` call per transport.
 """
 from __future__ import annotations
 
-from benchmarks.common import baseline_bcast_jct, gleam_bcast_jct
 from repro.core import fattree
-from repro.core.baselines import RingBcast
 from repro.core.engine import make_engine
+from repro.core.workload import Workload
 
 MEMBERS = ["h0", "h1", "h2", "h3"]
 EPOCHS = 8
@@ -29,39 +35,46 @@ def _epoch_bytes(e):
     return max(int(FIRST_BYTES * (1 - e / EPOCHS)), 1 << 12)
 
 
-def pb_gleam(engine="packet"):
-    """Panel broadcast: source rotates per epoch (Appendix B) on ONE
-    registered group — the engine handles source switching."""
+def _pb_total(transport: str, engine: str) -> float:
+    """Panel broadcast: source rotates per epoch (Appendix B).  Gleam
+    rotates on ONE registered group; the ring overlay relays in the
+    rotated member order with store-and-forward hops (chunks=1)."""
     eng = make_engine(engine, fattree.testbed())
-    total = 0.0
+    workloads = []
     for e in range(EPOCHS):
-        src = MEMBERS[e % len(MEMBERS)]
-        rec = eng.add_bcast(MEMBERS, _epoch_bytes(e), source=src)
-        eng.run()
-        total += rec.jct(len(MEMBERS) - 1)
-    return total
+        wl = Workload(f"fig11/pb_epoch{e}/{transport}")
+        if transport == "gleam":
+            # ONE registered group; Appendix-B source switching rotates
+            wl.bcast(MEMBERS, _epoch_bytes(e),
+                     source=MEMBERS[e % len(MEMBERS)])
+        else:
+            # overlay relays in the HPL rotation order
+            order = MEMBERS[e % 4:] + MEMBERS[:e % 4]
+            wl.bcast(order, _epoch_bytes(e), transport=transport, chunks=1)
+        workloads.append(wl)
+    recss = eng.run_workloads(workloads, timeout=60.0)
+    return sum(recs[0].jct(len(MEMBERS) - 1) for recs in recss)
+
+
+def pb_gleam(engine="packet"):
+    return _pb_total("gleam", engine)
 
 
 def pb_ring(engine="packet"):
-    total = 0.0
-    for e in range(EPOCHS):
-        order = MEMBERS[e % 4:] + MEMBERS[:e % 4]
-        # HPL increasing-ring: store-and-forward per hop (chunks=1)
-        jct, _, _ = baseline_bcast_jct(RingBcast, order, _epoch_bytes(e),
-                                       chunks=1, engine=engine)
-        total += jct
-    return total
+    return _pb_total("ring", engine)
 
 
 def rs_gleam(distribution, engine="packet"):
     """Row swap: every column node multicasts its rows to the column.
     Gleam JCT is distribution-independent: the owner sends once."""
-    total = 0.0
+    eng = make_engine(engine, fattree.testbed())
+    workloads = []
     for e in range(EPOCHS):
-        nbytes = _epoch_bytes(e)
-        jct, _, _ = gleam_bcast_jct(MEMBERS, nbytes, engine=engine)
-        total += jct
-    return total
+        wl = Workload(f"fig11/rs_epoch{e}")
+        wl.bcast(MEMBERS, _epoch_bytes(e))
+        workloads.append(wl)
+    recss = eng.run_workloads(workloads, timeout=60.0)
+    return sum(recs[0].jct(len(MEMBERS) - 1) for recs in recss)
 
 
 def rs_long(distribution):

@@ -4,34 +4,42 @@ and single-IO latency, Gleam vs 3-unicasts vs 1-copy ideal.
 Paper claims: 1.167M IOPS (Gleam) vs 0.413M (3-unicasts) vs 1.188M
 (1-copy) at 8KB IOs; latency -40% (64KB) and -60% (512KB).
 
-Both workloads run through the SimEngine layer: Gleam replication is one
+Both schemes are declared as Workload IR: Gleam replication is one
 one-to-many WRITE per IO (MR_UPDATE preamble included, §3.3); the
-baseline submits one unicast WRITE per copy.  IOPS and IO latency are
-computed from the MsgRecords exactly as core/metrics.py defines them.
+baseline workload submits one unicast WRITE per copy.  IOPS and IO
+latency come from the MsgRecords exactly as core/metrics.py defines
+them.
 
-The whole figure is stage-then-batch: every (IO size, scheme) workload
-is staged as one scenario on a single engine and driven by ONE
-``run_many`` call.  On the flow engine that is one vmapped solve for
-all seven workloads (and the 8KB/64KB/512KB points share a jit bucket);
-on the packet engine the scenarios run serially on the shared clock,
-which matches the per-workload runs they replace.
+The whole figure is one ``run_workloads`` call: every (IO size,
+scheme) workload is an independent scenario.  On the flow engine that
+is one vmapped solve for all seven workloads (and the 8KB/64KB/512KB
+points share a jit bucket); on the packet engine the scenarios run
+serially on a quiesced fabric, which matches the per-workload runs
+they replace.
 """
 from __future__ import annotations
 
 from repro.core import fattree
 from repro.core.engine import make_engine
 from repro.core.metrics import iops, mean_io_latency
+from repro.core.workload import Workload
 
 MEMBERS = ["h0", "h1", "h2", "h3"]
 
 
-def _stage_gleam(eng, io_bytes, n_ios, recs):
-    recs.extend(eng.add_write(MEMBERS, io_bytes) for _ in range(n_ios))
+def gleam_workload(io_bytes, n_ios) -> Workload:
+    wl = Workload(f"fig12/gleam_{io_bytes >> 10}k")
+    for _ in range(n_ios):
+        wl.write(MEMBERS, io_bytes)
+    return wl
 
 
-def _stage_unicast(eng, io_bytes, n_ios, copies, groups):
-    groups.extend([eng.add_unicast("h0", f"h{c + 1}", io_bytes)
-                   for c in range(copies)] for _ in range(n_ios))
+def unicast_workload(io_bytes, n_ios, copies) -> Workload:
+    wl = Workload(f"fig12/unicast_{io_bytes >> 10}k_x{copies}")
+    for _ in range(n_ios):
+        for c in range(copies):
+            wl.unicast("h0", f"h{c + 1}", io_bytes)
+    return wl
 
 
 def _gleam_metrics(recs):
@@ -39,7 +47,8 @@ def _gleam_metrics(recs):
     return iops(recs, recs[0].t_submit), mean_io_latency(recs)
 
 
-def _unicast_metrics(groups):
+def _unicast_metrics(recs, copies):
+    groups = [recs[i:i + copies] for i in range(0, len(recs), copies)]
     t0 = groups[0][0].t_submit
     assert all(r.complete for g in groups for r in g)
     # an IO completes when its LAST copy's CQE lands
@@ -51,41 +60,35 @@ def _unicast_metrics(groups):
 
 def gleam_run(io_bytes, n_ios, engine="packet"):
     eng = make_engine(engine, fattree.testbed())
-    recs: list = []
-    eng.run_many([lambda e: _stage_gleam(e, io_bytes, n_ios, recs)],
-                 timeout=120.0)
+    recs = eng.run_workloads([gleam_workload(io_bytes, n_ios)],
+                             timeout=120.0)[0]
     return _gleam_metrics(recs)
 
 
 def unicast_run(io_bytes, n_ios, copies=3, engine="packet"):
     eng = make_engine(engine, fattree.testbed())
-    groups: list = []
-    eng.run_many(
-        [lambda e: _stage_unicast(e, io_bytes, n_ios, copies, groups)],
-        timeout=120.0)
-    return _unicast_metrics(groups)
+    recs = eng.run_workloads([unicast_workload(io_bytes, n_ios, copies)],
+                             timeout=120.0)[0]
+    return _unicast_metrics(recs, copies)
 
 
 def run(rows, engine="packet"):
     n = 300
     eng = make_engine(engine, fattree.testbed())
-    gleam: dict = {}                 # io_bytes -> recs
-    uni: dict = {}                   # (io_bytes, copies) -> groups
-    scenarios = []
-    for io_bytes, n_ios in ((8 << 10, n), (64 << 10, 30), (512 << 10, 30)):
-        recs = gleam[io_bytes] = []
-        scenarios.append(lambda e, b=io_bytes, k=n_ios, r=recs:
-                         _stage_gleam(e, b, k, r))
-        groups = uni[(io_bytes, 3)] = []
-        scenarios.append(lambda e, b=io_bytes, k=n_ios, g=groups:
-                         _stage_unicast(e, b, k, 3, g))
-    ideal = uni[(8 << 10, 1)] = []
-    scenarios.append(lambda e, g=ideal: _stage_unicast(e, 8 << 10, n, 1, g))
-    eng.run_many(scenarios, timeout=120.0)
+    points = [(8 << 10, n), (64 << 10, 30), (512 << 10, 30)]
+    workloads = []
+    for io_bytes, n_ios in points:
+        workloads.append(gleam_workload(io_bytes, n_ios))
+        workloads.append(unicast_workload(io_bytes, n_ios, 3))
+    workloads.append(unicast_workload(8 << 10, n, 1))      # 1-copy ideal
+    recss = eng.run_workloads(workloads, timeout=120.0)
+    gleam = {io: recss[2 * i] for i, (io, _) in enumerate(points)}
+    uni = {(io, 3): recss[2 * i + 1] for i, (io, _) in enumerate(points)}
+    uni[(8 << 10, 1)] = recss[-1]
 
     g_iops, _ = _gleam_metrics(gleam[8 << 10])
-    u_iops, _ = _unicast_metrics(uni[(8 << 10, 3)])
-    o_iops, _ = _unicast_metrics(uni[(8 << 10, 1)])
+    u_iops, _ = _unicast_metrics(uni[(8 << 10, 3)], 3)
+    o_iops, _ = _unicast_metrics(uni[(8 << 10, 1)], 1)
     rows.append(("fig12/iops_8k/gleam_kiops", g_iops / 1e3,
                  f"{100 * g_iops / o_iops:.0f}% of 1-copy "
                  f"(paper 98%)"))
@@ -100,7 +103,7 @@ def run(rows, engine="packet"):
         f" [engine={engine}: batch-concurrent latency]"
     for kb, paper in ((64, 40), (512, 60)):
         _, gl = _gleam_metrics(gleam[kb << 10])
-        _, ul = _unicast_metrics(uni[(kb << 10, 3)])
+        _, ul = _unicast_metrics(uni[(kb << 10, 3)], 3)
         rows.append((f"fig13/lat_{kb}k/gleam_us", gl * 1e6, note.strip()))
         rows.append((f"fig13/lat_{kb}k/3unicast_us", ul * 1e6,
                      f"saving={100 * (1 - gl / ul):.0f}% "

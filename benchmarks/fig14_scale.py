@@ -6,10 +6,12 @@ stays ~flat with scale while ring/long grow (their parallel-unicast count
 expands linearly).
 
 Model: N simultaneous PB groups (one per row) + N RS groups (one per
-column), members row-/column-major on the fat-tree, all staged on a flow
-SimEngine and solved in one max-min fair batch.  Ring JCT uses the
-pipelined-chunk schedule on steady-state hop rates; `long` spreads then
-exchanges (volume-optimal when uniform).
+column), members row-/column-major on the fat-tree, declared as
+Workload IR and solved in one max-min fair batch.  The PB baseline is
+the same bcast ops over ``--transport`` (default ``ring`` — the HPL
+increasing-ring; any registered transport works at this scale, the
+point of the IR); `long` spreads then exchanges (volume-optimal when
+uniform).
 
 The sweep is stage-then-batch: every (scale, workload) scenario on the
 same topology is staged on ONE engine and solved by a single
@@ -42,6 +44,7 @@ if __package__ in (None, ""):      # `python benchmarks/fig14_scale.py`
 
 from repro.core.engine import make_engine
 from repro.core.fattree import GBPS, fat_tree
+from repro.core.workload import TRANSPORT_CHOICES, Workload
 
 VOLUME = 8 << 20                   # bytes per PB/RS message
 CHUNKS = 8
@@ -73,47 +76,40 @@ def _flow_engine(name: str):
     return "flow" if name == "packet" else name
 
 
-# ------------------------------------------------------------- scenarios
+# ------------------------------------------------------------- workloads
 
-def _stage_gleam(eng, n, recs):
+def gleam_workload(hosts, n) -> Workload:
     """N PB groups (rows) + N RS groups (columns), one bcast each."""
-    hosts = eng.topo.hosts
+    wl = Workload(f"fig14/gleam_{n}x{n}")
     for row in range(n):
-        members = hosts[row * n:(row + 1) * n]
-        recs.append(eng.add_bcast(members, VOLUME, key=row))
+        wl.bcast(hosts[row * n:(row + 1) * n], VOLUME, key=row)
     for col in range(n):
-        members = [hosts[row * n + col] for row in range(n)]
-        recs.append(eng.add_bcast(members, VOLUME, key=n + col))
+        wl.bcast([hosts[row * n + col] for row in range(n)], VOLUME,
+                 key=n + col)
+    return wl
 
 
-def _stage_ring_long(eng, n, ring_recs, long_recs):
-    """PB via pipelined increasing-ring + RS via `long` exchange, both
-    as concurrent unicast meshes."""
-    hosts = eng.topo.hosts
+def baseline_workload(hosts, n, transport="ring") -> Workload:
+    """PB over the baseline ``transport`` (one bcast op per row — the
+    engines lower it to the relay schedule) + RS via the `long`
+    neighbor exchange as a concurrent unicast mesh."""
+    wl = Workload(f"fig14/{transport}_long_{n}x{n}")
     for row in range(n):
-        members = hosts[row * n:(row + 1) * n]
-        for i in range(n - 1):                 # ring hop i -> i+1
-            ring_recs.append(eng.add_unicast(
-                members[i], members[i + 1], VOLUME // CHUNKS, key=row))
+        wl.bcast(hosts[row * n:(row + 1) * n], VOLUME,
+                 transport=transport, chunks=CHUNKS, key=row)
     for col in range(n):                       # long: neighbor exchange
         members = [hosts[row * n + col] for row in range(n)]
         for i in range(n - 1):
-            long_recs.append(eng.add_unicast(
-                members[i], members[i + 1],
-                VOLUME * (n - 1) // n, key=n + col))
+            wl.unicast(members[i], members[i + 1],
+                       VOLUME * (n - 1) // n, key=n + col)
+    return wl
 
 
-def _gleam_value(n, recs) -> float:
-    return max(r.jct(n - 1) for r in recs)
-
-
-def _ring_long_value(n, ring_recs, long_recs) -> float:
-    """Serial hop structure applied analytically on the fluid
-    steady-state rate: chunk time on the slowest ring hop, pipelined."""
-    chunk_t = max(r.jct(1) for r in ring_recs)
-    ring_jct = (n - 1 + CHUNKS - 1) * chunk_t
-    long_jct = max(r.jct(1) for r in long_recs)
-    return max(ring_jct, long_jct)
+def _values(n, g_recs, b_recs) -> tuple:
+    jg = max(r.jct(n - 1) for r in g_recs)
+    pb = max(r.jct(n - 1) for r in b_recs[:n])          # transport bcasts
+    long_jct = max(r.jct(1) for r in b_recs[n:])        # `long` unicasts
+    return jg, max(pb, long_jct)
 
 
 # ---------------------------------------------- per-scenario entry points
@@ -121,63 +117,57 @@ def _ring_long_value(n, ring_recs, long_recs) -> float:
 def gleam_jct(n, engine="flow") -> float:
     """Standalone (fresh-engine, solve-per-call) gleam point."""
     eng = make_engine(_flow_engine(engine), build(n))
-    recs: list = []
-    _stage_gleam(eng, n, recs)
-    eng.run()
-    return _gleam_value(n, recs)
+    recs = eng.run_workloads([gleam_workload(eng.topo.hosts, n)])[0]
+    return max(r.jct(n - 1) for r in recs)
 
 
-def ring_long_jct(n, engine="flow") -> float:
+def ring_long_jct(n, engine="flow", transport="ring") -> float:
     """Standalone (fresh-engine, solve-per-call) baseline point."""
     eng = make_engine(_flow_engine(engine), build(n))
-    ring_recs: list = []
-    long_recs: list = []
-    _stage_ring_long(eng, n, ring_recs, long_recs)
-    eng.run()
-    return _ring_long_value(n, ring_recs, long_recs)
+    recs = eng.run_workloads(
+        [baseline_workload(eng.topo.hosts, n, transport)])[0]
+    pb = max(r.jct(n - 1) for r in recs[:n])
+    return max(pb, max(r.jct(1) for r in recs[n:]))
 
 
 # ----------------------------------------------------------------- sweep
 
-def run(rows, engine="flow", scales=None, batched=True):
+def run(rows, engine="flow", transport="ring", scales=None, batched=True):
     """Default scales stop at 32 (1024 hosts, seconds) in BOTH entry
     points; the 16384-host top end is opt-in (CLI --full).
 
-    ``batched=True`` stages the whole sweep on one engine per topology
-    and solves it with a single ``run_many``; ``batched=False`` is the
-    PR-1 serial path (one engine + solve per scenario, for A/B timing).
+    ``batched=True`` declares the whole sweep as Workloads on one
+    engine per topology and solves it with a single ``run_workloads``;
+    ``batched=False`` is the PR-1 serial path (one engine + solve per
+    scenario, for A/B timing).  ``transport`` picks the PB baseline
+    overlay (``ring`` is the paper's; any registered transport runs).
     """
     engine = _flow_engine(engine)
+    if transport == "gleam":                   # baseline must be an overlay
+        transport = "ring"
     scales = tuple(scales or SCALES)
     results = {}
     if batched:
         for big in sorted({n * n > 1024 for n in scales}):
             group = [n for n in scales if (n * n > 1024) == big]
             eng = make_engine(engine, _build(big))
-            staged = []                 # (n, gleam_recs, ring, long)
-            scenarios = []
+            hosts = eng.topo.hosts
+            workloads = []
             for n in group:
-                g_recs: list = []
-                r_recs: list = []
-                l_recs: list = []
-                staged.append((n, g_recs, r_recs, l_recs))
-                scenarios.append(
-                    lambda e, n=n, r=g_recs: _stage_gleam(e, n, r))
-                scenarios.append(
-                    lambda e, n=n, a=r_recs, b=l_recs:
-                    _stage_ring_long(e, n, a, b))
-            eng.run_many(scenarios)
-            for n, g_recs, r_recs, l_recs in staged:
-                results[n] = (_gleam_value(n, g_recs),
-                              _ring_long_value(n, r_recs, l_recs))
+                workloads.append(gleam_workload(hosts, n))
+                workloads.append(baseline_workload(hosts, n, transport))
+            recss = eng.run_workloads(workloads)
+            for i, n in enumerate(group):
+                results[n] = _values(n, recss[2 * i], recss[2 * i + 1])
     else:
         for n in scales:
-            results[n] = (gleam_jct(n, engine), ring_long_jct(n, engine))
+            results[n] = (gleam_jct(n, engine),
+                          ring_long_jct(n, engine, transport))
     for n in scales:
         jg, jb = results[n]
         rows.append((f"fig14/hpl_{n}x{n}/gleam_ms", jg * 1e3,
                      f"engine={engine}"))
-        rows.append((f"fig14/hpl_{n}x{n}/ring_long_ms", jb * 1e3,
+        rows.append((f"fig14/hpl_{n}x{n}/{transport}_long_ms", jb * 1e3,
                      f"reduction={100 * (1 - jg / jb):.0f}% "
                      f"(paper 62-73%)"))
     return rows
@@ -188,6 +178,9 @@ def main(argv=None) -> int:
     ap.add_argument("--engine", default="flow",
                     choices=("packet", "flow", "flow-np"),
                     help="simulation backend (packet falls back to flow)")
+    ap.add_argument("--transport", default="ring",
+                    choices=[t for t in TRANSPORT_CHOICES if t != "gleam"],
+                    help="PB baseline overlay transport (paper: ring)")
     ap.add_argument("--full", action="store_true",
                     help=f"sweep {SCALES_FULL} (16384-host top end) "
                          f"instead of {SCALES}; staging the 16k-host "
@@ -199,7 +192,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     rows: list = []
     t0 = time.time()
-    run(rows, engine=args.engine,
+    run(rows, engine=args.engine, transport=args.transport,
         scales=SCALES_FULL if args.full else SCALES,
         batched=not args.serial)
     print("name,value,derived")

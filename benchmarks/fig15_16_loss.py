@@ -19,9 +19,8 @@ engine, so the sweep pins it regardless of ``--engine``.
 from __future__ import annotations
 
 from repro.core import fattree
-from repro.core.baselines import RingBcast
 from repro.core.engine import make_engine
-from repro.core.gleam import GleamNetwork
+from repro.core.workload import GroupOp
 
 NBYTES = 1 << 20
 LOSS_RATES = (0.0, 1e-6, 1e-5, 1e-4, 1e-3)
@@ -29,34 +28,29 @@ RING_LOSS_RATES = (0.0, 1e-4, 1e-3)    # baseline at the extremes (slow)
 SIZES = (64, 512)
 
 
-def _stage_gleam(group, loss):
-    """One staged gleam point: engine + pending bcast record."""
+def _point(group, loss, transport):
+    """One staged (scheme, group, loss) point: engine + pending record.
+    Both schemes are the SAME GroupOp — only the transport differs."""
     topo = fattree.testbed(n_hosts=group, bw=200 * fattree.GBPS)
     eng = make_engine("packet", topo, loss_rate=loss, seed=11,
-                      group_kw={"window": 512})
+                      group_kw={"window": 512},
+                      relay_kw={"window": 512})
     members = [f"h{i}" for i in range(group)]
-    rec = eng.add_bcast(members, NBYTES)
+    rec = eng.stage(GroupOp("bcast", members, NBYTES,
+                            transport=transport, chunks=8))
     return eng, rec
 
 
-def _stage_ring(group, loss):
-    """One staged ring-overlay point (overlay runner, own network)."""
-    topo = fattree.testbed(n_hosts=group, bw=200 * fattree.GBPS)
-    net = GleamNetwork(topo, loss_rate=loss, seed=11)
-    members = [f"h{i}" for i in range(group)]
-    b = RingBcast(net, members, chunks=8, window=512)
-    b.start(NBYTES)
-    return b
-
-
 def gleam_jct(group, loss):
-    eng, rec = _stage_gleam(group, loss)
+    eng, rec = _point(group, loss, "gleam")
     eng.run(timeout=120.0)
     return rec.jct(group - 1)
 
 
 def ring_jct(group, loss):
-    return _stage_ring(group, loss).run(timeout=240.0)
+    eng, rec = _point(group, loss, "ring")
+    eng.run(timeout=240.0)
+    return rec.jct(group - 1)
 
 
 def run(rows, engine="packet"):
@@ -68,13 +62,8 @@ def run(rows, engine="packet"):
     ring_pts = [(g, l) for g in SIZES for l in RING_LOSS_RATES]
     # BATCH: drive the sweep (lazy build-run-discard per point, see
     # module docstring)
-    jct_g = {}
-    for g, l in gleam_pts:
-        eng, rec = _stage_gleam(g, l)
-        eng.run(timeout=120.0)
-        jct_g[(g, l)] = rec.jct(g - 1)
-    jct_r = {(g, l): _stage_ring(g, l).run(timeout=240.0)
-             for g, l in ring_pts}
+    jct_g = {(g, l): gleam_jct(g, l) for g, l in gleam_pts}
+    jct_r = {(g, l): ring_jct(g, l) for g, l in ring_pts}
     # DERIVE rows
     for group in SIZES:
         base_g = jct_g[(group, 0.0)]

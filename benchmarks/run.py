@@ -5,6 +5,8 @@ Prints ``name,value,derived`` CSV rows (value is us/ms/IOPS as named).
     PYTHONPATH=src python -m benchmarks.run                    # everything
     PYTHONPATH=src python -m benchmarks.run fig09 fig14        # a subset
     PYTHONPATH=src python -m benchmarks.run --engine flow      # fluid model
+    PYTHONPATH=src python -m benchmarks.run fig09 --engine flow \
+        --transport multiunicast --group 1024                  # at scale
 
 The ``--engine`` flag selects the simulation backend for every module
 that supports backend selection (see ``core/engine.py``):
@@ -19,18 +21,30 @@ that supports backend selection (see ``core/engine.py``):
   (tests/test_engines.py); runs 1024+-host sweeps in seconds.
 - ``flow-np`` — same fluid model, numpy solver (no JAX needed).
 
+``--transport`` picks the baseline strategy the figures compare Gleam
+against — any name in the Workload-IR transport registry
+(``multiunicast`` | ``ring`` | ``binary-tree``; see
+``core/workload.py``).  Because both engines lower every transport,
+the Fig. 9-style comparison curves run at Fig. 14 scale:
+``--engine flow --transport ring --group 1024``.  Modules that pin a
+specific baseline shape (fig12's 3-unicast replication, fig15's
+ring-under-loss) ignore the flag.
+
 Modules that fundamentally need packet fidelity (fig15's loss sweeps)
 note it in their ``derived`` column and run the packet engine regardless.
-Each module's ``run(rows, engine=...)`` appends rows and returns them.
+Each module's ``run(rows, engine=..., ...)`` appends rows and returns
+them; orchestrator flags a module does not declare are not passed.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import sys
 import time
 
 from repro.core.engine import ENGINE_CHOICES
+from repro.core.workload import TRANSPORT_CHOICES
 
 MODULES = [
     "fig09_mpi_bcast",       # Fig. 9  MPI_Bcast JCT vs message size
@@ -50,17 +64,31 @@ def main(argv=None) -> int:
                     help="substring filters over module names")
     ap.add_argument("--engine", choices=ENGINE_CHOICES, default="packet",
                     help="simulation backend (default: packet)")
+    ap.add_argument("--transport", default=None,
+                    choices=[t for t in TRANSPORT_CHOICES if t != "gleam"],
+                    help="baseline transport for the comparison figures "
+                         "(default: each figure's paper baseline)")
+    ap.add_argument("--group", type=int, default=None,
+                    help="group size for figures that sweep it (fig09; "
+                         "default: the paper's testbed size)")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     wanted = [m for m in MODULES
               if not args.filters or any(a in m for a in args.filters)]
+    flags = {"engine": args.engine}
+    if args.transport is not None:
+        flags["transport"] = args.transport
+    if args.group is not None:
+        flags["group"] = args.group
     rows: list = []
     print("name,value,derived")
     for name in wanted:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
         before = len(rows)
+        accepted = inspect.signature(mod.run).parameters
+        kw = {k: v for k, v in flags.items() if k in accepted}
         try:
-            mod.run(rows, engine=args.engine)
+            mod.run(rows, **kw)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rows.append((f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}"))
         for n, v, d in rows[before:]:

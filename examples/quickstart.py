@@ -11,9 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fattree
-from repro.core.baselines import MultiUnicastBcast, RingBcast
 from repro.core.engine import make_engine
-from repro.core.gleam import GleamNetwork
+from repro.core.workload import GroupOp
 from repro.configs.base import get_config
 from repro.launch.mesh import single_device_mesh
 from repro.launch.steps import make_train_step
@@ -31,23 +30,25 @@ def part1_protocol():
     members = ["h0", "h1", "h2", "h3"]
 
     # the same experiment on both SimEngine backends (core/engine.py):
-    # per-packet reference vs vectorized fluid model
+    # per-packet reference vs vectorized fluid model.  The transport —
+    # in-fabric gleam vs the §2.3 overlays — is just a field of the
+    # staged GroupOp (core/workload.py), on either engine.
     jct = None
     for engine in ("packet", "flow"):
         eng = make_engine(engine, fattree.testbed())
-        rec = eng.add_bcast(members, nbytes)
+        rec = eng.stage(GroupOp("bcast", members, nbytes))
         eng.run()
         j = rec.jct(len(members) - 1)
         jct = jct or j
         print(f"  gleam (in-fabric) [{engine:7s}] JCT: {j * 1e6:9.1f} us")
 
-    for name, cls in [("multi-unicast", MultiUnicastBcast),
-                      ("ring overlay", RingBcast)]:
-        net_b = GleamNetwork(fattree.testbed())
-        b = cls(net_b, members)
-        b.start(nbytes)
-        jct_b = b.run()
-        print(f"  {name:28s} JCT: {jct_b * 1e6:9.1f} us  "
+    for transport in ("multiunicast", "ring"):
+        eng = make_engine("packet", fattree.testbed())
+        rec = eng.stage(GroupOp("bcast", members, nbytes,
+                                transport=transport))
+        eng.run()
+        jct_b = rec.jct(len(members) - 1)
+        print(f"  {transport + ' overlay':28s} JCT: {jct_b * 1e6:9.1f} us  "
               f"({jct_b / jct:.2f}x slower)")
 
 

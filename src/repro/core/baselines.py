@@ -15,10 +15,20 @@ baseline route identically:
 
 The classes run over plain RC unicast QPs in the packet simulator and
 record per-receiver delivery times so JCT is measured exactly like the
-Gleam path.  ``flow_baseline_jct`` is the fluid-model counterpart: it
-stages each overlay edge as a unicast flow on a ``FlowEngine`` and
-applies the pipelined-round structure analytically on the fluid
-steady-state hop time (the standard scalable approximation).
+Gleam path.
+
+Each baseline is also registered as a first-class **transport** in the
+Workload-IR registry (``core/workload.py``), so any engine stages it
+through the uniform API:
+
+    eng.stage(GroupOp("bcast", members, nbytes, transport="ring"))
+
+The packet engine lowers the transport onto the relay classes below;
+the flow engine lowers it onto the relay edge-set (``ring_edges`` etc.)
+and applies the pipelined-round structure analytically on the fluid
+steady-state hop time (the standard scalable approximation) — see
+``core/engine.py``.  ``flow_baseline_jct`` survives as a thin legacy
+wrapper over that path.
 """
 from __future__ import annotations
 
@@ -26,9 +36,11 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import packet as pk
+from repro.core import workload as wl
 from repro.core.gleam import GleamNetwork
 
-RELAY_OVERHEAD = 1.5e-6       # host store-and-forward cost per message
+# host store-and-forward cost per message (canonical home: workload.py)
+RELAY_OVERHEAD = wl.RELAY_OVERHEAD
 
 
 # ------------------------------------------------------------- schedules
@@ -51,12 +63,6 @@ def binary_tree_edges(members: Sequence[str]) -> List[Tuple[str, str]]:
 def multiunicast_edges(members: Sequence[str]) -> List[Tuple[str, str]]:
     """Fig. 2a: one sender edge per receiver (no relaying)."""
     return [(members[0], m) for m in members[1:]]
-
-
-def _tree_depth(n: int) -> int:
-    """Rounds for the deepest leaf of binary_tree_edges over n members
-    (heap indexing: member i sits at depth floor(log2(i+1)))."""
-    return int(math.floor(math.log2(n))) if n > 1 else 0
 
 
 class _Bcast:
@@ -178,45 +184,62 @@ class BinaryTreeBcast(_RelayBcast):
         return binary_tree_edges(self.members)
 
 
-# ------------------------------------------------------------ flow level
+# ----------------------------------------------------- transport registry
 
 BASELINE_KINDS = ("multiunicast", "ring", "bintree")
 
+
+def _packet_multiunicast(net, members, chunks, **qp_kw):
+    return MultiUnicastBcast(net, members, **qp_kw)   # chunking n/a
+
+
+def _packet_ring(net, members, chunks, **qp_kw):
+    return RingBcast(net, members, chunks=chunks, **qp_kw)
+
+
+def _packet_binary_tree(net, members, chunks, **qp_kw):
+    return BinaryTreeBcast(net, members, chunks=chunks, **qp_kw)
+
+
+# The four §5 transport strategies.  "gleam" is native: no relay edges,
+# the engines use their own multicast machinery (switch replication /
+# one flow over the distribution tree).
+wl.register_transport(wl.Transport("gleam"))
+wl.register_transport(wl.Transport(
+    "multiunicast", relay_edges=multiunicast_edges, chunked=False,
+    packet_bcast=_packet_multiunicast))
+wl.register_transport(wl.Transport(
+    "ring", relay_edges=ring_edges, chunked=True,
+    packet_bcast=_packet_ring))
+wl.register_transport(wl.Transport(
+    "binary-tree", relay_edges=binary_tree_edges, chunked=True,
+    packet_bcast=_packet_binary_tree))
+
+
+# ------------------------------------------------------------ flow level
 
 def flow_baseline_jct(engine, kind: str, members: Sequence[str],
                       nbytes: int, *, chunks: int = 8,
                       relay_overhead: float = RELAY_OVERHEAD,
                       key: int = 0) -> float:
-    """Fluid-model JCT of an overlay baseline on a flow ``SimEngine``.
+    """Legacy fluid-model JCT of an overlay baseline on a flow engine.
 
-    Stages every relay edge as a concurrent unicast flow of one chunk, so
-    sender fan-out and any shared fabric links contend for bandwidth the
-    max-min-fair way, then applies the schedule's round structure on the
-    steady-state chunk time:
-
-    - ``multiunicast``: no rounds — the n-1 full-volume flows' max
-      completion IS the JCT (the sender link serializes them);
-    - ``ring``:    (n-1 + chunks-1) pipelined rounds;
-    - ``bintree``: (depth + chunks-1) rounds, degree-2 fanout contention
-      captured by the concurrent per-edge flows.
+    Thin wrapper over the Workload-IR path: stages one bcast GroupOp
+    with the requested transport and returns its JCT (the engines'
+    overlay lowering stages every relay edge as a concurrent flow and
+    applies the pipelined-round structure on the steady-state chunk
+    time — see ``core/engine.py``).  Prefer ``engine.stage`` directly.
     """
     n = len(members)
     if n <= 1:
         return 0.0
-    if kind == "multiunicast":
-        recs = [engine.add_unicast(members[0], m, nbytes, key=key)
-                for m in members[1:]]
+    op = wl.GroupOp("bcast", tuple(members), nbytes, transport=kind,
+                    chunks=chunks, key=key)
+    old_overhead = getattr(engine, "relay_overhead", relay_overhead)
+    engine.relay_overhead = relay_overhead
+    try:
+        rec = engine.stage(op)
         engine.run()
-        return max(r.jct(1) for r in recs)
-    if kind == "ring":
-        edges, rounds = ring_edges(members), (n - 1) + (chunks - 1)
-    elif kind == "bintree":
-        edges, rounds = binary_tree_edges(members), \
-            _tree_depth(n) + (chunks - 1)
-    else:
-        raise ValueError(f"unknown baseline kind {kind!r}")
-    chunk = max(1, math.ceil(nbytes / max(chunks, 1)))
-    recs = [engine.add_unicast(a, b, chunk, key=key) for a, b in edges]
-    engine.run()
-    chunk_t = max(r.jct(1) for r in recs)
-    return rounds * (chunk_t + relay_overhead)
+    finally:
+        engine.relay_overhead = old_overhead
+    return rec.jct(n - 1)

@@ -13,27 +13,53 @@ Every Gleam experiment is, at bottom, a batch of group operations on a
   progressive-filling loop (``flowsim``).  Seconds per epoch at 16k
   hosts — the §5.3 scale regime.
 
-The contract (``SimEngine``) is the staging methods plus two drivers:
+The contract (``SimEngine``) is the Workload-IR entry points plus two
+drivers (``core/workload.py`` defines the IR):
 
-    rec = eng.add_bcast(members, nbytes)     # stage a one-to-many SEND
-    rec = eng.add_write(members, nbytes)     # stage a one-to-many WRITE
-    rec = eng.add_unicast(src, dst, nbytes)  # stage a plain RC transfer
-    eng.run()                                # drive staged ops to done
-    eng.run_many([stage_a, stage_b, ...])    # batched scenarios
+    rec  = eng.stage(GroupOp(op, members, nbytes,
+                             transport=...))       # declarative staging
+    eng.run()                                      # drive staged ops
+    eng.run_many([stage_a, stage_b, ...])          # batched scenarios
+    recss = eng.run_workloads([wl_a, wl_b, ...])   # batched Workloads
+
+``GroupOp.transport`` selects the strategy carrying the bytes — the
+§5 comparison axis: ``gleam`` (in-fabric multicast) vs the §2.3
+overlays ``multiunicast`` / ``ring`` / ``binary-tree``.  Transports
+resolve through the registry in ``core/workload.py``: the packet
+engine lowers an overlay onto the relay classes of ``baselines.py``
+(per-packet fidelity, host forwarding overheads and all), while the
+flow engine lowers it onto the transport's relay edge-set — each relay
+hop is a concurrent fluid flow of one chunk, and the pipelined-round
+structure is applied analytically on the steady-state hop time.  That
+symmetry is what lets the Fig. 9-11 baseline curves run at the
+Fig. 14 scale regime, and ``tests/test_engines.py`` cross-validates
+every transport's JCT between the two engines within 10%.
+
+``allreduce`` is the one op beyond the paper's surface: it lowers
+uniformly (both engines) to a fan-in reduce — every member unicasts
+its contribution to the root, the many-to-one analogue of Algs. 2-3's
+feedback aggregation — followed by a bcast of the result over the
+op's transport.
 
 ``run_many`` is the stage-then-batch API: each scenario callable stages
 ops on the engine, and all scenarios are then driven as INDEPENDENT
 experiments (no cross-scenario bandwidth sharing).  The flow engine
 solves every scenario in one vmapped executable
-(``flowsim_jax.solve_many``); the packet engine falls back to running
-them serially on its shared clock.  Benchmarks sweeping a parameter
-(message size, group scale, loss rate) should stage the whole sweep and
-make ONE ``run_many`` call.
+(``flowsim_jax.solve_many``); the packet engine runs them serially,
+quiescing between scenarios (drain residual events, reset the clock
+and congestion state) so its serial fallback keeps the same
+independent-experiment semantics.  ``run_workloads`` is the IR-level
+wrapper: one ``Workload`` = one scenario, returning per-op records.
 
-Each ``add_*`` returns a ``metrics.MsgRecord``; after ``run()`` the
+Each staged op returns a ``metrics.MsgRecord``; after ``run()`` the
 record carries per-receiver delivery times and the sender CQE time, so
 JCT / IOPS / IO-latency are computed identically regardless of backend
 (see ``core/metrics.py`` for the §5 definitions).
+
+The pre-IR staging methods (``add_bcast`` / ``add_write`` /
+``add_unicast``) remain as deprecation shims that delegate to
+``stage`` — existing callers keep working for one release and see a
+``DeprecationWarning``.
 
 Engines are selected by name through ``make_engine`` — the same names
 the ``--engine`` flag of ``benchmarks/run.py`` accepts:
@@ -53,6 +79,7 @@ ACK clocking) exist only in the packet engine.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, \
     Tuple, runtime_checkable
 
@@ -60,6 +87,8 @@ from repro.core import packet as pk
 from repro.core.fattree import Topology
 from repro.core.flowsim import FlowSim
 from repro.core.metrics import MsgRecord
+from repro.core.workload import (GroupOp, RELAY_OVERHEAD, Transport,
+                                 Workload, get_transport, relay_plan)
 
 ENGINE_CHOICES = ("packet", "flow", "flow-np")
 
@@ -71,21 +100,8 @@ class SimEngine(Protocol):
     name: str
     topo: Topology
 
-    def add_bcast(self, members: Sequence[str], nbytes: int, *,
-                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
-        """Stage a one-to-many SEND from ``source`` (default: first
-        member) to the remaining members; returns its record."""
-        ...
-
-    def add_write(self, members: Sequence[str], nbytes: int, *,
-                  source: Optional[str] = None, same_mr: bool = False,
-                  key: int = 0) -> MsgRecord:
-        """Stage a one-to-many WRITE (§3.3; ``same_mr`` = Appendix C)."""
-        ...
-
-    def add_unicast(self, src: str, dst: str, nbytes: int, *,
-                    key: int = 0) -> MsgRecord:
-        """Stage a plain RC unicast transfer src -> dst."""
+    def stage(self, op: GroupOp) -> MsgRecord:
+        """Stage one declarative group operation; returns its record."""
         ...
 
     def run(self, timeout: float = 30.0) -> float:
@@ -95,18 +111,94 @@ class SimEngine(Protocol):
     def run_many(self, scenarios: Sequence[Callable[["SimEngine"], None]],
                  timeout: float = 30.0) -> List[float]:
         """Stage-then-batch: each callable stages ops on this engine;
-        all scenarios then run without sharing bandwidth with each
-        other.  Returns the engine clock at each scenario's completion
-        — backend-specific (the flow engine starts every scenario at
-        the current ``now``; the packet engine runs them back-to-back,
-        so its values accumulate).  Compute metrics from the records
+        all scenarios then run as independent experiments (no
+        cross-scenario bandwidth sharing).  Returns the engine clock at
+        each scenario's completion — compute metrics from the records
         (relative to their ``t_submit``), not from these values."""
         ...
+
+    def run_workloads(self, workloads: Sequence[Workload],
+                      timeout: float = 30.0) -> List[List[MsgRecord]]:
+        """Run each Workload as one independent scenario; returns the
+        per-op records of each workload, in op order."""
+        ...
+
+
+# ==================================================== shared staging glue
+
+class _WorkloadStaging:
+    """The engine-agnostic half of the contract: GroupOp dispatch,
+    Workload batching, and the deprecated ``add_*`` shims.
+
+    Concrete engines provide the four lowering primitives:
+    ``_stage_unicast`` / ``_stage_native`` (gleam bcast+write) /
+    ``_stage_overlay`` (relay transports) / ``_stage_allreduce``.
+    """
+
+    relay_overhead: float = RELAY_OVERHEAD
+
+    def stage(self, op: GroupOp) -> MsgRecord:
+        transport = get_transport(op.transport)
+        if op.op == "unicast":
+            return self._stage_unicast(op.members[0], op.members[1],
+                                       op.nbytes, op.key)
+        if op.op == "allreduce":
+            return self._stage_allreduce(op, transport)
+        if transport.native:
+            return self._stage_native(op)
+        return self._stage_overlay(op, transport)
+
+    def run_workloads(self, workloads: Sequence[Workload],
+                      timeout: float = 30.0) -> List[List[MsgRecord]]:
+        out: List[List[MsgRecord]] = [[] for _ in workloads]
+
+        def scenario(wl: Workload, recs: List[MsgRecord]):
+            def fn(eng):
+                recs.extend(eng.stage(op) for op in wl.ops)
+            return fn
+
+        self.run_many([scenario(wl, recs)
+                       for wl, recs in zip(workloads, out)], timeout)
+        return out
+
+    # ------------------------------------------------- deprecated shims
+
+    def _legacy(self, name: str, op: GroupOp) -> MsgRecord:
+        warnings.warn(
+            f"SimEngine.{name}() is deprecated; stage a workload.GroupOp "
+            f"via stage() instead", DeprecationWarning, stacklevel=3)
+        return self.stage(op)
+
+    def add_bcast(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
+        """Deprecated: ``stage(GroupOp('bcast', members, nbytes))``."""
+        return self._legacy("add_bcast", GroupOp(
+            "bcast", tuple(members), nbytes, source=source, key=key))
+
+    def add_write(self, members: Sequence[str], nbytes: int, *,
+                  source: Optional[str] = None, same_mr: bool = False,
+                  key: int = 0) -> MsgRecord:
+        """Deprecated: ``stage(GroupOp('write', members, nbytes))``."""
+        return self._legacy("add_write", GroupOp(
+            "write", tuple(members), nbytes, source=source,
+            same_mr=same_mr, key=key))
+
+    def add_unicast(self, src: str, dst: str, nbytes: int, *,
+                    key: int = 0) -> MsgRecord:
+        """Deprecated: ``stage(GroupOp('unicast', (src, dst), nbytes))``."""
+        return self._legacy("add_unicast", GroupOp(
+            "unicast", (src, dst), nbytes, key=key))
 
 
 # =========================================================== packet engine
 
-class PacketEngine:
+def _cqe_from_deliveries(rec: MsgRecord) -> None:
+    """Overlay completion policy: the 'CQE' of a software relay bcast
+    is the last relay delivery (the overlay has no aggregated ACK)."""
+    rec.t_sender_cqe = max(rec.t_deliver.values())
+
+
+class PacketEngine(_WorkloadStaging):
     """Cycle-accurate backend: adapts ``GleamNetwork``/``MulticastGroup``
     (per-packet event simulation) to the SimEngine contract.
 
@@ -114,20 +206,25 @@ class PacketEngine:
     (registration time is excluded from message records, matching how the
     paper measures steady-state JCT after setup) and reused across
     epochs; Appendix-B source switching handles source rotation.
+    Overlay transports lower onto the ``baselines.py`` relay classes —
+    real RC unicast QPs with per-hop host forwarding overhead.
+    ``relay_kw`` forwards QP tuning (window, mtu, ...) to those relays.
     """
 
     name = "packet"
 
     def __init__(self, topo: Topology, *, group_kw: Optional[dict] = None,
-                 **sim_kw):
+                 relay_kw: Optional[dict] = None, **sim_kw):
         from repro.core.gleam import GleamNetwork
         self.topo = topo
         self.net = GleamNetwork(topo, **sim_kw)
         self.group_kw = dict(group_kw or {})
+        self.relay_kw = dict(relay_kw or {})
         self._groups: Dict[Tuple[str, ...], object] = {}
         self._chans: Dict[Tuple[str, str], object] = {}
         self._staged: List = []                 # submission thunks
-        self._pending: List[Tuple[MsgRecord, int]] = []
+        # (record, n deliveries to wait for, completion policy or None)
+        self._pending: List[Tuple[MsgRecord, int, Optional[Callable]]] = []
 
     # ------------------------------------------------------------ helpers
 
@@ -160,25 +257,91 @@ class PacketEngine:
             g.records[real.msg_id] = rec
 
         self._staged.append(thunk)
-        self._pending.append((rec, g.n_receivers()))
+        self._pending.append((rec, g.n_receivers(), None))
         return rec
 
-    # ----------------------------------------------------------- protocol
+    # ----------------------------------------------------------- lowering
 
-    def add_bcast(self, members: Sequence[str], nbytes: int, *,
-                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
-        return self._stage_group_op(members, nbytes, source,
-                                    lambda g: g.bcast(nbytes))
+    def _stage_native(self, op: GroupOp) -> MsgRecord:
+        if op.op == "write":
+            return self._stage_group_op(
+                op.members, op.nbytes, op.source,
+                lambda g: g.write(op.nbytes, same_mr=op.same_mr))
+        return self._stage_group_op(op.members, op.nbytes, op.source,
+                                    lambda g: g.bcast(op.nbytes))
 
-    def add_write(self, members: Sequence[str], nbytes: int, *,
-                  source: Optional[str] = None, same_mr: bool = False,
-                  key: int = 0) -> MsgRecord:
-        return self._stage_group_op(
-            members, nbytes, source,
-            lambda g: g.write(nbytes, same_mr=same_mr))
+    def _stage_overlay(self, op: GroupOp, transport: Transport) -> MsgRecord:
+        """Relay transports run the ``baselines.py`` machinery: QPs are
+        wired at stage time (silent), data submission is deferred."""
+        members = op.ordered_members()
+        b = transport.packet_bcast(self.net, members, op.chunks,
+                                   **self.relay_kw)
+        rec = MsgRecord(-1, op.nbytes, self.net.sim.now)
+        b.t_deliver = rec.t_deliver             # deliveries land on rec
 
-    def add_unicast(self, src: str, dst: str, nbytes: int, *,
-                    key: int = 0) -> MsgRecord:
+        def thunk():
+            rec.t_submit = self.net.sim.now
+            b.start(op.nbytes)
+
+        self._staged.append(thunk)
+        self._pending.append((rec, b.n_receivers(), _cqe_from_deliveries))
+        return rec
+
+    def _stage_allreduce(self, op: GroupOp, transport: Transport
+                         ) -> MsgRecord:
+        """Fan-in reduce (every member unicasts its contribution to the
+        root — the many-to-one analogue of the paper's feedback
+        aggregation) followed by a bcast of the result over the op's
+        transport, triggered when the last contribution lands."""
+        sim = self.net.sim
+        members = op.ordered_members()
+        root = members[0]
+        rec = MsgRecord(-1, op.nbytes, sim.now)
+
+        if transport.native:
+            g = self._group(tuple(members))
+            overlay = None
+        else:
+            overlay = transport.packet_bcast(self.net, members, op.chunks,
+                                             **self.relay_kw)
+            overlay.t_deliver = rec.t_deliver
+
+        def start_bcast(now: float) -> None:
+            rec.t_deliver[root] = now           # root holds the result
+            if overlay is not None:
+                overlay.start(op.nbytes)
+                return
+            if root != g.source:
+                g.switch_source(root)
+            real = g.bcast(op.nbytes)
+            g.records[real.msg_id] = rec        # deliveries + CQE -> rec
+
+        arrived: set = set()
+        pairs = []
+        for m in members[1:]:
+            qa, qb = self.net.unicast_qp(m, root)
+
+            def on_deliver(mid, now, m=m):
+                arrived.add(m)
+                if len(arrived) == len(members) - 1:
+                    start_bcast(now)
+
+            qb.on_deliver = on_deliver
+            pairs.append((m, qa))
+
+        def thunk():
+            rec.t_submit = sim.now
+            for m, qa in pairs:
+                qa.submit(op.nbytes, sim.now)
+                sim.kick(sim.hosts[m], sim.now)
+
+        self._staged.append(thunk)
+        fin = _cqe_from_deliveries if overlay is not None else None
+        self._pending.append((rec, len(members), fin))
+        return rec
+
+    def _stage_unicast(self, src: str, dst: str, nbytes: int,
+                       key: int = 0) -> MsgRecord:
         chan = self._chans.get((src, dst))
         if chan is None:
             qa, qb = self.net.unicast_qp(src, dst)
@@ -203,8 +366,10 @@ class PacketEngine:
             sim.kick(sim.hosts[src], sim.now)
 
         self._staged.append(thunk)
-        self._pending.append((rec, 1))
+        self._pending.append((rec, 1, None))
         return rec
+
+    # ------------------------------------------------------------ drivers
 
     def run(self, timeout: float = 30.0) -> float:
         sim = self.net.sim
@@ -215,22 +380,64 @@ class PacketEngine:
         while self._pending:
             before = sim.events
             sim.run(until=deadline)
-            self._pending = [
-                (r, n) for r, n in self._pending
-                if len(r.t_deliver) < n or r.t_sender_cqe < 0]
+            still = []
+            for r, n, fin in self._pending:
+                if fin is not None and len(r.t_deliver) >= n \
+                        and r.t_sender_cqe < 0:
+                    fin(r)
+                if len(r.t_deliver) < n or r.t_sender_cqe < 0:
+                    still.append((r, n, fin))
+            self._pending = still
             if not self._pending:
                 break
             if sim.events == before or sim.now >= deadline:
                 break                           # stalled or out of budget
         return sim.now
 
+    def _quiesce(self, timeout: float) -> None:
+        """Restore independent-experiment semantics between serial
+        scenarios: drain residual events (stray ACKs, armed timers),
+        then reset the clock and every clock-bearing piece of state
+        (NIC egress reservations, rate-pacing gates, DCQCN rate
+        machines, switch CNP aging) so the next scenario starts on a
+        fresh fabric — matching the flow engine's isolated scenarios.
+        Connection state (groups, QPs, PSNs) survives: registration is
+        setup the paper excludes from steady-state measurements."""
+        sim = self.net.sim
+        deadline = sim.now + timeout
+        if sim._q:
+            sim.run(until=deadline)             # drain to empty (bounded)
+        # a stalled scenario (lossy fabric, armed timers) can hit the
+        # deadline with events still queued — discard them rather than
+        # let them fire into the next scenario off the reset clock
+        sim._q.clear()
+        sim.now = 0.0
+        sim._free.clear()
+        for host in sim.hosts.values():
+            host._kick_t = math.inf
+            for qp in host.qps.values():
+                qp.next_emit_t = 0.0
+                qp.timer_deadline = math.inf
+                if hasattr(qp, "_timer_ev"):
+                    qp._timer_ev = math.inf
+                qp.rate.rate = qp.rate.peak
+                qp.rate.alpha = 1.0
+                qp.rate.last_cnp = -math.inf
+                qp.rate.last_inc = 0.0
+                qp.last_cnp_t = -math.inf
+        for sw in sim.switches.values():
+            sw._cnp_t.clear()
+
     def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0
                  ) -> List[float]:
-        """Serial fallback: scenarios run back-to-back on the shared
-        packet clock (groups/QPs are reused across scenarios; records
-        still measure relative to their own ``t_submit``)."""
+        """Serial fallback with independent-experiment semantics: each
+        scenario runs on a quiesced fabric with the clock reset to 0
+        (groups/QPs are reused across scenarios; records measure
+        relative to their own ``t_submit``)."""
         ends = []
-        for stage in scenarios:
+        for i, stage in enumerate(scenarios):
+            if i:
+                self._quiesce(timeout)
             stage(self)
             ends.append(self.run(timeout))
         return ends
@@ -243,17 +450,21 @@ def wire_bytes(nbytes: int, mtu: int = pk.MTU, hdr: int = pk.HDR) -> int:
     return nbytes + max(1, math.ceil(nbytes / mtu)) * hdr
 
 
-class FlowEngine:
-    """Fluid backend: one max-min-fair flow per staged operation.
+class FlowEngine(_WorkloadStaging):
+    """Fluid backend: one max-min-fair flow per staged transfer.
 
-    A multicast (bcast/write) occupies the union of its tree links as a
-    single flow (the switch replicates; the sender serializes once); a
-    unicast occupies its ECMP path.  ``run()`` hands the staged batch to
-    the solver (JAX when ``backend='jax'``/'auto' and available, numpy
-    otherwise), then back-fills the records: delivery time = flow
-    completion + each receiver's path latency (propagation + per-hop
-    store-and-forward of one segment); sender CQE = slowest delivery +
-    the aggregated-ACK return propagation.
+    A gleam multicast (bcast/write) occupies the union of its tree
+    links as a single flow (the switch replicates; the sender
+    serializes once); a unicast occupies its ECMP path.  An overlay
+    transport stages one concurrent chunk-flow per relay edge and a
+    *finalizer* applies the schedule's pipelined-round structure on the
+    solved steady-state hop time (see ``_stage_overlay``).  ``run()``
+    hands the staged batch to the solver (JAX when
+    ``backend='jax'``/'auto' and available, numpy otherwise), then
+    back-fills the records: delivery time = flow completion + each
+    receiver's path latency (propagation + per-hop store-and-forward of
+    one segment); sender CQE = slowest delivery + the aggregated-ACK
+    return propagation.
     """
 
     def __init__(self, topo: Topology, *, backend: str = "auto", **sim_kw):
@@ -280,6 +491,7 @@ class FlowEngine:
         self.name = "flow" if use_jax else "flow-np"
         self._sim = self._sim_cls(topo)          # LinkMap + solver
         self._staged: List[tuple] = []           # (links, volume, rec, info)
+        self._post: List[Callable[[float], float]] = []   # composite fins
         self._lat_memo: Dict[tuple, Tuple[float, float]] = {}
         self._next_msg = 0
         self.now = 0.0
@@ -306,19 +518,23 @@ class FlowEngine:
                 (prop + sf, prop)
         return memo
 
-    # ----------------------------------------------------------- protocol
+    # ----------------------------------------------------------- lowering
 
     def _stage(self, links, volume: float, rec: MsgRecord,
                deliver: Dict[str, float], cqe_extra: float) -> MsgRecord:
         self._staged.append((links, volume, rec, deliver, cqe_extra))
         return rec
 
+    def _new_rec(self, nbytes: int) -> MsgRecord:
+        rec = MsgRecord(self._next_msg, nbytes, self.now)
+        self._next_msg += 1
+        return rec
+
     def _mcast(self, members: Sequence[str], nbytes: int, volume: float,
                source: Optional[str], key: int) -> MsgRecord:
         source = source or members[0]
         links = self._sim.multicast_tree_links(source, members, key)
-        rec = MsgRecord(self._next_msg, nbytes, self.now)
-        self._next_msg += 1
+        rec = self._new_rec(nbytes)
         seg = wire_bytes(min(nbytes, pk.MTU))
         deliver, back = {}, 0.0
         for m in members:
@@ -329,27 +545,116 @@ class FlowEngine:
             back = max(back, prop)
         return self._stage(links, volume, rec, deliver, back)
 
-    def add_bcast(self, members: Sequence[str], nbytes: int, *,
-                  source: Optional[str] = None, key: int = 0) -> MsgRecord:
-        return self._mcast(members, nbytes, wire_bytes(nbytes), source, key)
-
-    def add_write(self, members: Sequence[str], nbytes: int, *,
-                  source: Optional[str] = None, same_mr: bool = False,
-                  key: int = 0) -> MsgRecord:
-        volume = float(wire_bytes(nbytes))
-        if not same_mr:
+    def _stage_native(self, op: GroupOp) -> MsgRecord:
+        volume = float(wire_bytes(op.nbytes))
+        if op.op == "write" and not op.same_mr:
             # §3.3: the MR_UPDATE preamble rides the same tree
-            volume += wire_bytes(12 * (len(members) - 1) + 16)
-        return self._mcast(members, nbytes, volume, source, key)
+            volume += wire_bytes(12 * (len(op.members) - 1) + 16)
+        return self._mcast(op.members, op.nbytes, volume, op.source, op.key)
 
-    def add_unicast(self, src: str, dst: str, nbytes: int, *,
-                    key: int = 0) -> MsgRecord:
+    def _stage_overlay(self, op: GroupOp, transport: Transport) -> MsgRecord:
+        """Relay lowering: one concurrent fluid flow per relay edge (so
+        sender fan-out and shared fabric links contend max-min-fairly),
+        then a finalizer replays the relay pipeline analytically on the
+        solved steady-state hop time: member at ``h`` relay hops gets
+        its last chunk at ``(chunks-1+h) * ser + cum_latency(h) +
+        (h-1) * relay_overhead`` — ``ser`` the slowest edge's fluid
+        chunk serialization, matching the packet relays' store-and-
+        forward pipeline (chunks stream back-to-back; each hop adds its
+        path latency plus the host forwarding cost)."""
+        members = op.ordered_members()
+        plan = relay_plan(transport, members)
+        chunks = op.chunks if transport.chunked else 1
+        chunk = op.nbytes if not transport.chunked else \
+            max(1, math.ceil(op.nbytes / chunks))
+        seg = wire_bytes(min(chunk, pk.MTU))
+        rec = self._new_rec(op.nbytes)
+        comp = []                               # (child, hidden, lat, prop)
+        for parent, child, hops in plan:
+            links = self._sim.unicast_links(parent, child, op.key)
+            lat, prop = self._path_latency(parent, child, seg, op.key)
+            hidden = self._new_rec(chunk)
+            self._stage(links, float(wire_bytes(chunk)), hidden,
+                        {child: lat}, prop)
+            comp.append((child, hidden, lat, prop))
+
+        if not transport.chunked:               # multiunicast: direct flows
+            def fin(t0: float) -> float:
+                for child, hidden, lat, prop in comp:
+                    rec.t_deliver[child] = hidden.t_deliver[child]
+                rec.t_sender_cqe = max(
+                    hidden.t_deliver[child] + prop
+                    for child, hidden, lat, prop in comp)
+                return rec.t_sender_cqe
+        else:
+            # cumulative path latency source -> member along the relay
+            # chain (edges arrive parent-before-child in hop order)
+            lat_edge = {child: lat for child, _, lat, _ in comp}
+            parent_of = {child: parent for parent, child, _ in plan}
+            overhead = self.relay_overhead
+
+            def fin(t0: float) -> float:
+                ser = max(hidden.t_deliver[child] - t0 - lat
+                          for child, hidden, lat, _ in comp)
+                back = max(prop for _, _, _, prop in comp)
+                cum = {members[0]: 0.0}         # hop order: parent first
+                for _, child, hops in sorted(plan, key=lambda e: e[2]):
+                    cum[child] = cum[parent_of[child]] + lat_edge[child]
+                    rec.t_deliver[child] = t0 + \
+                        (chunks - 1 + hops) * ser + cum[child] + \
+                        (hops - 1) * overhead
+                rec.t_sender_cqe = max(rec.t_deliver.values()) + back
+                return rec.t_sender_cqe
+
+        self._post.append(fin)
+        return rec
+
+    def _stage_allreduce(self, op: GroupOp, transport: Transport
+                         ) -> MsgRecord:
+        """Fan-in reduce + transport bcast, phase-sequenced by the
+        finalizer (reduce and bcast flows solve concurrently — they
+        occupy opposite link directions on duplex fabrics, so each
+        phase sees its standalone rate — and the bcast timeline is
+        shifted by the reduce completion)."""
+        members = op.ordered_members()
+        root = members[0]
+        rec = self._new_rec(op.nbytes)
+        seg = wire_bytes(min(op.nbytes, pk.MTU))
+        red = []
+        for m in members[1:]:
+            links = self._sim.unicast_links(m, root, op.key)
+            lat, _ = self._path_latency(m, root, seg, op.key)
+            hidden = self._new_rec(op.nbytes)
+            self._stage(links, float(wire_bytes(op.nbytes)), hidden,
+                        {root: lat}, 0.0)
+            red.append(hidden)
+
+        bop = GroupOp("bcast", tuple(members), op.nbytes,
+                      transport=op.transport, key=op.key, chunks=op.chunks)
+        brec = self._stage_native(bop) if transport.native \
+            else self._stage_overlay(bop, transport)
+
+        def fin(t0: float) -> float:
+            r_done = max(h.t_deliver[root] for h in red)
+            shift = r_done - t0
+            rec.t_deliver[root] = r_done
+            for m in members[1:]:
+                rec.t_deliver[m] = brec.t_deliver[m] + shift
+            rec.t_sender_cqe = brec.t_sender_cqe + shift
+            return rec.t_sender_cqe
+
+        self._post.append(fin)
+        return rec
+
+    def _stage_unicast(self, src: str, dst: str, nbytes: int,
+                       key: int = 0) -> MsgRecord:
         links = self._sim.unicast_links(src, dst, key)
-        rec = MsgRecord(self._next_msg, nbytes, self.now)
-        self._next_msg += 1
+        rec = self._new_rec(nbytes)
         seg = wire_bytes(min(nbytes, pk.MTU))
         lat, prop = self._path_latency(src, dst, seg, key)
         return self._stage(links, wire_bytes(nbytes), rec, {dst: lat}, prop)
+
+    # ------------------------------------------------------------ drivers
 
     def _backfill(self, staged, flows, t0: float) -> float:
         """Turn solver completion times into record bookkeeping;
@@ -363,17 +668,23 @@ class FlowEngine:
             end = max(end, rec.t_sender_cqe)
         return end
 
+    def _finalize(self, staged, post, flows, t0: float) -> float:
+        end = self._backfill(staged, flows, t0)
+        for fin in post:                        # composite records
+            end = max(end, fin(t0))
+        return end
+
     def run(self, timeout: float = 30.0) -> float:
-        if not self._staged:
+        if not self._staged and not self._post:
             return self.now
         sim = self._sim                          # reuse routing + caps
         sim.flows, sim.now = [], 0.0             # fresh batch, epoch-local t
         flows = [sim.add(links, volume)
                  for links, volume, _, _, _ in self._staged]
         sim.run()
-        self.now = max(self.now, self._backfill(self._staged, flows,
-                                                self.now))
-        self._staged = []
+        self.now = max(self.now, self._finalize(self._staged, self._post,
+                                                flows, self.now))
+        self._staged, self._post = [], []
         return self.now
 
     def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0
@@ -384,7 +695,7 @@ class FlowEngine:
         ONE vmapped solve (``solve_many``); the numpy solver falls back
         to per-scenario solves.  Returns per-scenario end times; the
         engine clock advances to the latest one."""
-        if self._staged:
+        if self._staged or self._post:
             raise RuntimeError("pending staged ops; run() them first or "
                                "stage them inside a scenario")
         sim = self._sim
@@ -392,40 +703,56 @@ class FlowEngine:
         metas = []
         for stage in scenarios:
             stage(self)
-            metas.append(self._staged)
-            self._staged = []
+            metas.append((self._staged, self._post))
+            self._staged, self._post = [], []
         sim.flows, sim.now = [], 0.0
         epoch_flows = [[sim.add(links, volume)
-                        for links, volume, _, _, _ in meta]
-                       for meta in metas]
+                        for links, volume, _, _, _ in staged]
+                       for staged, _ in metas]
         if hasattr(sim, "solve_many"):           # vmapped batch (JAX)
             sim.solve_many(epoch_flows)
         else:                                    # numpy: epoch-serial
             for flows in epoch_flows:
                 sim.flows, sim.now = flows, 0.0
                 sim.run()
-        ends = [self._backfill(meta, flows, t0)
-                for meta, flows in zip(metas, epoch_flows)]
+        ends = [self._finalize(staged, post, flows, t0)
+                for (staged, post), flows in zip(metas, epoch_flows)]
         self.now = max([self.now] + ends)
         return ends
 
 
 # ================================================================= factory
 
+def _flow_np(topo: Topology, **kw):
+    kw["backend"] = "np"
+    return FlowEngine(topo, **kw)
+
+
+def _flow_auto(topo: Topology, **kw):
+    kw.setdefault("backend", "auto")
+    return FlowEngine(topo, **kw)
+
+
+_ENGINES: Dict[str, Callable[..., SimEngine]] = {
+    "packet": PacketEngine,
+    "flow": _flow_auto,
+    "flow-np": _flow_np,
+    "flow_np": _flow_np,
+}
+
+
 def make_engine(name: str, topo: Topology, **kw) -> SimEngine:
     """Build a backend by ``--engine`` name (see ENGINE_CHOICES).
 
     Extra kwargs go to the backend: the packet engine forwards them to
     ``GleamNetwork``/``PacketSim`` (``loss_rate``, ``seed``, ``p4_mode``,
-    ``ecn_backlog``, plus ``group_kw`` for MulticastGroup tuning); the
-    flow engines accept ``backend`` ('auto' | 'jax' | 'np').
+    ``ecn_backlog``, plus ``group_kw`` / ``relay_kw`` for multicast-group
+    and overlay-relay tuning); the flow engines accept ``backend``
+    ('auto' | 'jax' | 'np').  Unknown names raise ValueError listing
+    the valid ones.
     """
-    if name == "packet":
-        return PacketEngine(topo, **kw)
-    if name == "flow":
-        kw.setdefault("backend", "auto")
-        return FlowEngine(topo, **kw)
-    if name in ("flow-np", "flow_np"):
-        kw["backend"] = "np"
-        return FlowEngine(topo, **kw)
-    raise ValueError(f"unknown engine {name!r}; choose from {ENGINE_CHOICES}")
+    factory = _ENGINES.get(name)
+    if factory is None:
+        raise ValueError(
+            f"unknown engine {name!r}; choose from {ENGINE_CHOICES}")
+    return factory(topo, **kw)

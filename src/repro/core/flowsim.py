@@ -20,7 +20,10 @@ waves, so even 16384-host topologies run in seconds.
 ``LinkMap`` (topology -> dense directed-link ids, unicast paths, multicast
 tree link sets) is shared with the vectorized JAX backend
 (``flowsim_jax``) so both flow engines route identically; only the
-max-min solver differs.
+max-min solver differs.  The overlay *transports* of the Workload IR
+(multiunicast / ring / binary-tree — ``core/workload.py``) route
+through the same ``unicast_links`` per relay edge, so a baseline and
+its Gleam counterpart contend on identical fabric paths.
 """
 from __future__ import annotations
 

@@ -1,0 +1,275 @@
+"""Workload IR — engine-agnostic group operations with first-class
+transport strategies.
+
+The paper's headline results (§5, Figs. 9-16) are *comparisons*: the
+same group operation carried by Gleam's in-fabric multicast vs the
+application-layer transports of §2.3 (multiple unicasts, pipelined
+ring, binary tree).  This module makes that comparison axis a *value*
+instead of a parallel class hierarchy:
+
+- ``GroupOp``   — one declarative group operation: ``op`` (bcast /
+  write / unicast / allreduce), ``members``, ``nbytes``, and a
+  ``transport`` naming how the bytes move (``gleam`` | ``multiunicast``
+  | ``ring`` | ``binary-tree``).
+- ``Workload``  — an ordered batch of ``GroupOp``s that runs as ONE
+  independent scenario (no bandwidth sharing with other workloads).
+- the **transport registry** — ``Transport`` descriptors looked up by
+  ``get_transport``; each engine lowers a descriptor its own way (the
+  packet engine onto the ``baselines`` relay machinery, the flow
+  engine onto the transport's relay edge-set; see ``core/engine.py``).
+
+Both simulation engines consume the IR through one entry point:
+
+    rec  = eng.stage(GroupOp("bcast", members, nbytes,
+                             transport="ring"))   # -> MsgRecord
+    recs = eng.run_workloads([wl_a, wl_b])        # batched scenarios
+
+which replaces the deprecated per-op staging methods (``add_bcast`` /
+``add_write`` / ``add_unicast`` — thin shims now delegate here).
+
+The IR is plain data: ``to_dict`` / ``from_dict`` round-trip a
+``Workload`` through JSON-compatible dicts, so sweeps can be declared
+in config files and checked into reference fixtures
+(``tools/check_fig09.py`` drives CI's divergence gate this way).
+
+Built-in transports register from ``core/baselines.py`` (imported
+lazily on first lookup, so flow-only users never pay for it eagerly);
+``register_transport`` accepts additional strategies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "OP_CHOICES", "TRANSPORT_CHOICES", "RELAY_OVERHEAD",
+    "GroupOp", "Workload", "Transport",
+    "register_transport", "get_transport", "transport_names",
+]
+
+OP_CHOICES = ("bcast", "write", "unicast", "allreduce")
+
+# The four §5 transport strategies.  The registry may hold more
+# (register_transport), but these are what --transport advertises.
+TRANSPORT_CHOICES = ("gleam", "multiunicast", "ring", "binary-tree")
+
+# Spelling tolerance: the pre-IR baselines API called the binary tree
+# "bintree"; argparse-unfriendly spellings normalize too.
+_TRANSPORT_ALIASES = {
+    "bintree": "binary-tree",
+    "binary_tree": "binary-tree",
+    "binarytree": "binary-tree",
+    "multi-unicast": "multiunicast",
+}
+
+# Host store-and-forward cost per relayed message (RX stack -> CPU ->
+# TX stack, §2.3) — the overlay transports' per-hop software penalty.
+# Lives here (not baselines.py) because every engine's overlay lowering
+# needs it; baselines re-exports it for compatibility.
+RELAY_OVERHEAD = 1.5e-6
+
+
+# ============================================================== registry
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """How a one-to-many operation moves bytes.
+
+    ``relay_edges(members) -> [(parent, child), ...]`` is the overlay
+    relay schedule over the member list (source first); ``None`` means
+    the transport is *native* — the fabric itself replicates (Gleam)
+    and the engine's multicast machinery applies.  ``chunked``
+    transports pipeline the message in ``GroupOp.chunks`` segments,
+    re-serialized at every relay hop.  ``packet_bcast(net, members,
+    chunks, **qp_kw)`` builds the packet-level runner (a
+    ``baselines._Bcast``); ``None`` again means native.
+    """
+
+    name: str
+    relay_edges: Optional[Callable[[Sequence[str]],
+                                   List[Tuple[str, str]]]] = None
+    chunked: bool = False
+    packet_bcast: Optional[Callable] = None
+
+    @property
+    def native(self) -> bool:
+        return self.relay_edges is None
+
+
+_TRANSPORTS: Dict[str, Transport] = {}
+
+
+def register_transport(t: Transport) -> Transport:
+    """Add a transport strategy to the registry (last writer wins)."""
+    _TRANSPORTS[t.name] = t
+    return t
+
+
+_builtins_loaded = False
+
+
+def _ensure_builtin_transports() -> None:
+    global _builtins_loaded
+    if not _builtins_loaded:
+        _builtins_loaded = True
+        # baselines.py registers the four built-ins at import time
+        from repro.core import baselines  # noqa: F401  (side effect)
+
+
+def transport_names() -> Tuple[str, ...]:
+    """Registered transport names (built-ins register on first use)."""
+    _ensure_builtin_transports()
+    return tuple(sorted(_TRANSPORTS))
+
+
+def canonical_transport(name: str) -> str:
+    """Normalize aliases and validate; raises ValueError when unknown."""
+    _ensure_builtin_transports()
+    canon = _TRANSPORT_ALIASES.get(name, name)
+    if canon not in _TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {name!r}; choose from "
+            f"{tuple(sorted(_TRANSPORTS))}")
+    return canon
+
+
+def get_transport(name: str) -> Transport:
+    """Look up a transport by name; ValueError lists the valid names."""
+    return _TRANSPORTS[canonical_transport(name)]
+
+
+# ==================================================================== IR
+
+@dataclasses.dataclass(frozen=True)
+class GroupOp:
+    """One declarative group operation.
+
+    ``members`` is the participant list; the first member is the
+    source unless ``source`` overrides it.  ``unicast`` takes exactly
+    ``(src, dst)``.  ``transport`` selects the strategy (see
+    TRANSPORT_CHOICES); ``chunks`` is the pipeline depth of the
+    chunked overlay transports (ring / binary-tree) and ignored
+    elsewhere; ``same_mr`` is the Appendix-C WRITE optimization
+    (gleam only); ``key`` seeds ECMP spreading.
+    """
+
+    op: str
+    members: Tuple[str, ...]
+    nbytes: int
+    transport: str = "gleam"
+    source: Optional[str] = None
+    same_mr: bool = False
+    key: int = 0
+    chunks: int = 8
+
+    def __post_init__(self):
+        object.__setattr__(self, "members", tuple(self.members))
+        object.__setattr__(self, "transport",
+                           canonical_transport(self.transport))
+        if self.op not in OP_CHOICES:
+            raise ValueError(
+                f"unknown op {self.op!r}; choose from {OP_CHOICES}")
+        if self.nbytes <= 0:
+            raise ValueError(f"nbytes must be positive, got {self.nbytes}")
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.op == "unicast":
+            if len(self.members) != 2:
+                raise ValueError("unicast takes exactly (src, dst) members, "
+                                 f"got {len(self.members)}")
+        elif len(self.members) < 2:
+            raise ValueError(f"{self.op} needs >= 2 members, "
+                             f"got {len(self.members)}")
+        if self.source is not None and self.source not in self.members:
+            raise ValueError(f"source {self.source!r} not in members")
+
+    def ordered_members(self) -> List[str]:
+        """Members with the effective source rotated to the front —
+        the relay order the overlay schedules consume."""
+        members = list(self.members)
+        src = self.source or members[0]
+        if members[0] != src:
+            members.remove(src)
+            members.insert(0, src)
+        return members
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GroupOp":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown GroupOp fields: {sorted(unknown)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class Workload:
+    """An ordered batch of GroupOps run as ONE independent scenario.
+
+    The builder methods append an op and return it, so benchmark code
+    can keep a handle for record lookup:
+
+        wl = Workload("fig09/1MB")
+        wl.bcast(members, 1 << 20)                       # gleam
+        wl.bcast(members, 1 << 20, transport="ring")     # baseline
+        recs = eng.run_workloads([wl])[0]                # per-op records
+    """
+
+    name: str = ""
+    ops: List[GroupOp] = dataclasses.field(default_factory=list)
+
+    def add(self, op: GroupOp) -> GroupOp:
+        self.ops.append(op)
+        return op
+
+    def bcast(self, members: Sequence[str], nbytes: int, **kw) -> GroupOp:
+        return self.add(GroupOp("bcast", tuple(members), nbytes, **kw))
+
+    def write(self, members: Sequence[str], nbytes: int, **kw) -> GroupOp:
+        return self.add(GroupOp("write", tuple(members), nbytes, **kw))
+
+    def unicast(self, src: str, dst: str, nbytes: int, **kw) -> GroupOp:
+        return self.add(GroupOp("unicast", (src, dst), nbytes, **kw))
+
+    def allreduce(self, members: Sequence[str], nbytes: int,
+                  **kw) -> GroupOp:
+        return self.add(GroupOp("allreduce", tuple(members), nbytes, **kw))
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "ops": [op.to_dict() for op in self.ops]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Workload":
+        unknown = set(d) - {"name", "ops"}
+        if unknown:
+            raise ValueError(f"unknown Workload fields: {sorted(unknown)}")
+        return cls(name=d.get("name", ""),
+                   ops=[GroupOp.from_dict(o) for o in d.get("ops", [])])
+
+
+def relay_plan(transport: Transport, members: Sequence[str]
+               ) -> List[Tuple[str, str, int]]:
+    """Lowered overlay schedule: ``(parent, child, hops_from_source)``
+    per relay edge, hops computed by walking the edge list's parent
+    chain — any registered transport only has to provide edges."""
+    edges = transport.relay_edges(members)
+    parent = {b: a for a, b in edges}
+    hops: Dict[str, int] = {members[0]: 0}
+
+    def depth(node: str) -> int:
+        chain = []
+        while node not in hops:                 # iterative: rings are deep
+            chain.append(node)
+            node = parent[node]
+        d = hops[node]
+        for n in reversed(chain):
+            d = hops[n] = d + 1
+        return d
+
+    return [(a, b, depth(b)) for a, b in edges]

@@ -2,9 +2,11 @@
 
 The packet engine is the fidelity reference; the flow engines must agree
 with it on topologies small enough for both to run.  ISSUE acceptance:
-bcast JCT within 10% on a small topology — asserted here on the paper's
-testbed AND on a 2-pod fat tree, across message sizes.  The two flow
-solvers (numpy / JAX) must agree with each other far tighter.
+JCT within 10% on a small topology FOR EVERY TRANSPORT (gleam /
+multiunicast / ring / binary-tree) — asserted here on the paper's
+testbed across message sizes, plus the original gleam checks on a
+2-pod fat tree.  The two flow solvers (numpy / JAX) must agree with
+each other far tighter.
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ import pytest
 from repro.core import fattree
 from repro.core.engine import (ENGINE_CHOICES, FlowEngine, PacketEngine,
                                SimEngine, make_engine, wire_bytes)
+from repro.core.workload import TRANSPORT_CHOICES, GroupOp
 
 
 def two_pod_fat_tree():
@@ -69,6 +72,72 @@ def test_two_pod_fat_tree_bcast_jct_agrees_within_10pct(nbytes):
     jp = bcast_jct("packet", topo, members, nbytes)
     jf = bcast_jct("flow", two_pod_fat_tree(), members, nbytes)
     assert abs(jf - jp) / jp < 0.10, (jp, jf)
+
+
+# =============================================== transport parity (ISSUE 3)
+
+def transport_bcast_jct(engine_name, transport, nbytes, members=None):
+    members = members or ["h0", "h1", "h2", "h3"]
+    eng = make_engine(engine_name, fattree.testbed(n_hosts=len(members)))
+    rec = eng.stage(GroupOp("bcast", members, nbytes, transport=transport))
+    eng.run(timeout=120.0)
+    jct = rec.jct(len(members) - 1)
+    assert jct != float("inf"), (engine_name, transport)
+    return jct
+
+
+@pytest.mark.parametrize("transport", TRANSPORT_CHOICES)
+@pytest.mark.parametrize("nbytes", [256 << 10, 1 << 20])
+def test_transport_jct_parity_flow_vs_packet(transport, nbytes):
+    """Every transport must agree between the packet lowering (the
+    baselines.py relay machinery) and the flow lowering (relay edge
+    flows + analytic pipeline) within the 10% acceptance bound."""
+    jp = transport_bcast_jct("packet", transport, nbytes)
+    jf = transport_bcast_jct("flow", transport, nbytes)
+    assert abs(jf - jp) / jp < 0.10, (transport, jp, jf)
+
+
+@pytest.mark.parametrize("transport", TRANSPORT_CHOICES)
+def test_transport_flow_solvers_agree(transport):
+    """numpy and JAX lower transports identically (same edge flows,
+    same finalizers): JCTs must match to 0.1%."""
+    pytest.importorskip("jax")
+    j_np = transport_bcast_jct("flow-np", transport, 1 << 20)
+    j_jx = transport_bcast_jct("flow", transport, 1 << 20)
+    assert abs(j_np - j_jx) / j_np < 1e-3, (transport, j_np, j_jx)
+
+
+@pytest.mark.parametrize("transport", TRANSPORT_CHOICES)
+def test_allreduce_parity_flow_vs_packet(transport):
+    """allreduce = fan-in reduce + transport bcast on BOTH engines.
+    Bound is looser than bcast (20%): the fluid model solves both
+    phases concurrently, so phases sharing a host uplink (e.g. the
+    ring overlay's relay egress vs the member's reduce contribution)
+    contend in the solve while the packet engine sequences them."""
+    members = ["h0", "h1", "h2", "h3"]
+    jcts = {}
+    for name in ("packet", "flow"):
+        eng = make_engine(name, fattree.testbed())
+        rec = eng.stage(GroupOp("allreduce", members, 1 << 20,
+                                transport=transport))
+        eng.run(timeout=120.0)
+        jcts[name] = rec.jct(len(members))      # every member delivers
+        assert jcts[name] != float("inf"), name
+    assert abs(jcts["flow"] - jcts["packet"]) / jcts["packet"] < 0.20, \
+        (transport, jcts)
+
+
+def test_overlay_transport_per_receiver_ordering():
+    """Relay pipelines deliver in hop order: on a ring, receiver i+1
+    cannot finish before receiver i (both engines)."""
+    members = ["h0", "h1", "h2", "h3"]
+    for name in ("packet", "flow"):
+        eng = make_engine(name, fattree.testbed())
+        rec = eng.stage(GroupOp("bcast", members, 1 << 20,
+                                transport="ring"))
+        eng.run(timeout=120.0)
+        times = [rec.t_deliver[m] for m in members[1:]]
+        assert times == sorted(times), (name, times)
 
 
 def test_flow_solvers_agree_tightly():

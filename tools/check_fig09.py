@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""CI divergence gate for the Workload-IR benchmark path.
+
+Runs the Fig. 9 Gleam-vs-multiunicast comparison through the new API
+(``benchmarks.fig09_mpi_bcast.run`` with ``transport="multiunicast"``)
+on the flow engine at smoke scale, and compares every row against the
+checked-in reference numbers.  A relative divergence above 10% on any
+row fails the build — catching regressions in the transport lowering,
+the fluid solver, or the staging path.
+
+    PYTHONPATH=src python tools/check_fig09.py             # verify
+    PYTHONPATH=src python tools/check_fig09.py --update    # regenerate
+
+Exit code 0 = within tolerance; 1 = divergence (listed on stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+REF_PATH = os.path.join(REPO, "benchmarks", "ref_fig09_flow.json")
+TOLERANCE = 0.10
+GROUP = 8                              # smoke scale: 8-member group
+SIZES = [64 << 10, 1 << 20, 8 << 20]   # KB..MB ladder, one jit bucket
+
+
+def measure() -> dict:
+    from benchmarks.fig09_mpi_bcast import run
+    rows: list = []
+    run(rows, engine="flow", transport="multiunicast", group=GROUP,
+        sizes=SIZES)
+    return {name: value for name, value, _ in rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the reference file from this run")
+    args = ap.parse_args(argv)
+    got = measure()
+    if args.update:
+        with open(REF_PATH, "w", encoding="utf-8") as f:
+            json.dump({"group": GROUP, "sizes": SIZES,
+                       "tolerance": TOLERANCE, "rows_us": got},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check_fig09: wrote {len(got)} rows -> {REF_PATH}")
+        return 0
+    if not os.path.exists(REF_PATH):
+        print(f"check_fig09: missing reference {REF_PATH} "
+              f"(run with --update)", file=sys.stderr)
+        return 1
+    with open(REF_PATH, encoding="utf-8") as f:
+        ref = json.load(f)["rows_us"]
+    problems = []
+    for name, want in sorted(ref.items()):
+        have = got.get(name)
+        if have is None:
+            problems.append(f"missing row {name}")
+            continue
+        dev = abs(have - want) / want
+        status = "FAIL" if dev > TOLERANCE else "ok"
+        print(f"check_fig09: {status} {name}: {have:.2f}us "
+              f"(ref {want:.2f}us, {100 * dev:.1f}%)")
+        if dev > TOLERANCE:
+            problems.append(f"{name}: {have:.2f}us vs ref {want:.2f}us "
+                            f"({100 * dev:.1f}% > {100 * TOLERANCE:.0f}%)")
+    for name in sorted(set(got) - set(ref)):
+        problems.append(f"unexpected row {name} (run --update?)")
+    if problems:
+        for p in problems:
+            print(f"check_fig09: {p}", file=sys.stderr)
+        return 1
+    print(f"check_fig09: OK ({len(ref)} rows within "
+          f"{100 * TOLERANCE:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
