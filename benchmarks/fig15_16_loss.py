@@ -6,17 +6,25 @@ goodput >= 90% at loss <= 1e-4, ~42% at 1e-3 (the multicast sender
 retransmits when ANY receiver loses — more loss-sensitive than unicast,
 Fig. 16), still 7x lower JCT than the baseline at 0.1%.
 
-Structured stage-then-batch: the whole (scheme, group, loss) sweep is
-declared as a point list up front and DRIVEN in one batch loop before
-any row is derived.  Each point's packet network is built lazily
-inside the loop and discarded after its run — a 512-host PacketSim
-carries full endpoint/switch/group state, so keeping ~16 of them
-resident (true up-front staging) would multiply peak memory for zero
-batching benefit on a backend that can only run serially.  Loss
-recovery (go-back-N, NACK aggregation) only exists in the packet
-engine, so the sweep pins it regardless of ``--engine``.
+Loss recovery is exactly where a single seed is least trustworthy: which
+packets the fabric discards decides whether one go-back-N round or a
+timeout-recovery storm follows, so each (scheme, group, loss) point runs
+``seeds`` independent repetitions and reports mean±std.  The
+repetitions are scenarios of ONE ``run_many`` batch on one engine — the
+engine quiesces between scenarios and gives scenario *i* the RNG stream
+derived from ``(seed, i)``, so the repetitions double as the seed axis
+and parallelize across worker processes (``workers``; see
+``core/engine.py``).
+
+Each point's packet network is still built lazily and discarded after
+its batch — a 512-host PacketSim carries full endpoint/switch/group
+state, so keeping ~16 of them resident would multiply peak memory for
+nothing.  Loss recovery (go-back-N, NACK aggregation) only exists in
+the packet engine, so the sweep pins it regardless of ``--engine``.
 """
 from __future__ import annotations
+
+import math
 
 from repro.core import fattree
 from repro.core.engine import make_engine
@@ -26,6 +34,7 @@ NBYTES = 1 << 20
 LOSS_RATES = (0.0, 1e-6, 1e-5, 1e-4, 1e-3)
 RING_LOSS_RATES = (0.0, 1e-4, 1e-3)    # baseline at the extremes (slow)
 SIZES = (64, 512)
+DEFAULT_SEEDS = 3
 
 
 def _point(group, loss, transport):
@@ -41,7 +50,29 @@ def _point(group, loss, transport):
     return eng, rec
 
 
+def _sweep_point(group, loss, transport, seeds, workers, timeout):
+    """(mean, std, per-seed JCTs) over ``seeds`` independent repetitions
+    of one (scheme, group, loss) point, run as one run_many batch."""
+    topo = fattree.testbed(n_hosts=group, bw=200 * fattree.GBPS)
+    eng = make_engine("packet", topo, loss_rate=loss, seed=11,
+                      group_kw={"window": 512},
+                      relay_kw={"window": 512})
+    members = [f"h{i}" for i in range(group)]
+    recs = []
+
+    def scenario(e):
+        recs.append(e.stage(GroupOp("bcast", members, NBYTES,
+                                    transport=transport, chunks=8)))
+
+    eng.run_many([scenario] * seeds, timeout=timeout, workers=workers)
+    jcts = [r.jct(group - 1) for r in recs]
+    mean = sum(jcts) / len(jcts)
+    std = math.sqrt(sum((j - mean) ** 2 for j in jcts) / len(jcts))
+    return mean, std, jcts
+
+
 def gleam_jct(group, loss):
+    """Single-seed JCT of the Gleam point (bench/bisect helper)."""
     eng, rec = _point(group, loss, "gleam")
     eng.run(timeout=120.0)
     return rec.jct(group - 1)
@@ -53,29 +84,35 @@ def ring_jct(group, loss):
     return rec.jct(group - 1)
 
 
-def run(rows, engine="packet"):
+def run(rows, engine="packet", seeds=DEFAULT_SEEDS, workers=0,
+        sizes=SIZES):
     if engine != "packet":
         rows.append(("fig15/note", 0.0,
                      f"engine={engine} unsupported; using packet"))
+    seeds = max(1, int(seeds))
     # STAGE: declare every point of the sweep before driving any of it
-    gleam_pts = [(g, l) for g in SIZES for l in LOSS_RATES]
-    ring_pts = [(g, l) for g in SIZES for l in RING_LOSS_RATES]
-    # BATCH: drive the sweep (lazy build-run-discard per point, see
-    # module docstring)
-    jct_g = {(g, l): gleam_jct(g, l) for g, l in gleam_pts}
-    jct_r = {(g, l): ring_jct(g, l) for g, l in ring_pts}
-    # DERIVE rows
-    for group in SIZES:
-        base_g = jct_g[(group, 0.0)]
+    gleam_pts = [(g, l) for g in sizes for l in LOSS_RATES]
+    ring_pts = [(g, l) for g in sizes for l in RING_LOSS_RATES]
+    # BATCH: drive the sweep; each point is a seeds-wide run_many batch
+    # (lazy build-run-discard per point, see module docstring)
+    jct_g = {(g, l): _sweep_point(g, l, "gleam", seeds, workers,
+                                  120.0)[:2] for g, l in gleam_pts}
+    jct_r = {(g, l): _sweep_point(g, l, "ring", seeds, workers,
+                                  240.0)[:2] for g, l in ring_pts}
+    # DERIVE rows (mean ms; derived column carries ±std and goodput)
+    for group in sizes:
+        base_g = jct_g[(group, 0.0)][0]
         for loss in LOSS_RATES:
-            jg = jct_g[(group, loss)]
+            jg, sg = jct_g[(group, loss)]
             goodput = base_g / jg if jg > 0 else 0.0
             label = f"{loss:.0e}" if loss else "0"
             rows.append((f"fig15/jct_g{group}_loss{label}/gleam_ms",
-                         jg * 1e3, f"goodput={100 * goodput:.0f}%"))
+                         jg * 1e3,
+                         f"±{sg * 1e3:.4f}ms n={seeds} "
+                         f"goodput={100 * goodput:.0f}%"))
         for loss in RING_LOSS_RATES:
-            jr = jct_r[(group, loss)]
+            jr, sr = jct_r[(group, loss)]
             label = f"{loss:.0e}" if loss else "0"
             rows.append((f"fig15/jct_g{group}_loss{label}/ring_ms",
-                         jr * 1e3, ""))
+                         jr * 1e3, f"±{sr * 1e3:.4f}ms n={seeds}"))
     return rows

@@ -71,6 +71,13 @@ def main(argv=None) -> int:
     ap.add_argument("--group", type=int, default=None,
                     help="group size for figures that sweep it (fig09; "
                          "default: the paper's testbed size)")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="independent repetitions per point for figures "
+                         "that report mean±std (fig15/16; default 3)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="scenario-parallel worker processes for packet-"
+                         "engine batches (0 = one per CPU, 1 = serial; "
+                         "default 0 where supported)")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     wanted = [m for m in MODULES
               if not args.filters or any(a in m for a in args.filters)]
@@ -79,6 +86,10 @@ def main(argv=None) -> int:
         flags["transport"] = args.transport
     if args.group is not None:
         flags["group"] = args.group
+    if args.seeds is not None:
+        flags["seeds"] = args.seeds
+    if args.workers is not None:
+        flags["workers"] = args.workers
     rows: list = []
     print("name,value,derived")
     for name in wanted:

@@ -85,6 +85,13 @@ class QP:
         self.rto = rto
         self.on_complete = on_complete      # (msg, now) sender CQE
         self.on_deliver = on_deliver        # (msg_id, now) receiver done
+        # ---- NIC ready-set plumbing (set by packetsim.Host.add_qp):
+        # the owning host keeps a set of QPs with sender-side work so its
+        # emission loop never rescans idle connections; every transition
+        # of the pending predicate below calls _ready_sync.
+        self._host = None                   # packetsim.Host or None
+        self._order = 0                     # stable round-robin position
+        self._timer_ev = INF                # earliest armed timer event
         # ---- sender state
         self.sq_psn = 0                     # next fresh PSN to assign
         self.snd_una = 0                    # oldest unacked PSN
@@ -108,6 +115,18 @@ class QP:
 
     # ------------------------------------------------------------- sender
 
+    def _ready_sync(self) -> None:
+        """Keep the owning host's ready-set consistent with this QP's
+        pending predicate (the exact filter the NIC emission loop used
+        to evaluate by scanning every QP)."""
+        h = self._host
+        if h is None:
+            return
+        if self.sq_psn != self.snd_nxt or self.snd_una != self.sq_psn:
+            h._mark_ready(self)
+        else:
+            h._mark_idle(self)
+
     def submit(self, nbytes: int, now: float, *, op: str = "send",
                va: int = 0, rkey: int = 0, payload=None,
                msg_id: Optional[int] = None) -> Message:
@@ -116,6 +135,7 @@ class QP:
                     nbytes, op, self.sq_psn, n_pkts, va, rkey, payload, now)
         self.msgs.append(m)
         self.sq_psn = pk.psn_add(self.sq_psn, n_pkts)
+        self._ready_sync()
         return m
 
     def _locate(self, psn: int) -> Optional[Message]:
@@ -137,15 +157,15 @@ class QP:
         """The NIC asks for the next data packet.  Returns (packet or None,
         earliest time anything could become ready)."""
         self.rate.maybe_increase(now)
-        if self.snd_nxt == self.sq_psn:
+        psn = self.snd_nxt
+        if psn == self.sq_psn:
             return None, INF                       # nothing to (re)send
-        if self.outstanding() >= self.window:
+        if (psn - self.snd_una) % pk.PSN_MOD >= self.window:
             return None, INF                       # window closed: ACK-clocked
         if now < self.next_emit_t:
             return None, self.next_emit_t          # rate-paced
-        psn = self.snd_nxt
         m = self._locate(psn)
-        off = pk.psn_sub(psn, m.base_psn)
+        off = (psn - m.base_psn) % pk.PSN_MOD
         nbytes = min(self.mtu, m.nbytes - off * self.mtu) if m.nbytes else 0
         nbytes = max(nbytes, 1)
         p = pk.data_packet(self.ip, self.dst_ip, self.dst_qpn, psn, nbytes,
@@ -153,7 +173,7 @@ class QP:
                            last=(off == m.n_pkts - 1), src_qpn=self.qpn)
         if m.op == "mr_update":
             p.payload = m.payload
-        self.snd_nxt = pk.psn_add(self.snd_nxt, 1)
+        self.snd_nxt = (psn + 1) % pk.PSN_MOD
         self.next_emit_t = now + p.size / self.rate.rate
         if self.timer_deadline == INF:
             self.timer_deadline = now + self.rto
@@ -161,24 +181,28 @@ class QP:
 
     def on_ack(self, psn: int, now: float) -> None:
         """Cumulative ACK: everything <= psn is delivered everywhere."""
-        una = pk.psn_add(psn, 1)
-        if not pk.psn_gt(una, self.snd_una):
+        M, W = pk.PSN_MOD, pk.PSN_WINDOW
+        una = (psn + 1) % M
+        old = self.snd_una
+        if una == old or (una - old) % M >= W:     # not psn_gt(una, old)
             return
         self.snd_una = una
-        if pk.psn_gt(self.snd_una, self.snd_nxt):
-            self.snd_nxt = self.snd_una     # ACK beyond snd_nxt (stale rtx)
-        self.timer_deadline = (INF if self.snd_una == self.sq_psn
+        nxt = self.snd_nxt
+        if una != nxt and (una - nxt) % M < W:
+            self.snd_nxt = una              # ACK beyond snd_nxt (stale rtx)
+        self.timer_deadline = (INF if una == self.sq_psn
                                else now + self.rto)
         # complete messages whose last PSN is covered
         while self._done_msgs < len(self.msgs):
             m = self.msgs[self._done_msgs]
-            end = pk.psn_add(m.base_psn, m.n_pkts - 1)
-            if not pk.psn_gt(una, end):
+            end = (m.base_psn + m.n_pkts - 1) % M
+            if una == end or (una - end) % M >= W:  # not psn_gt(una, end)
                 break
             m.t_complete = now
             self._done_msgs += 1
             if self.on_complete:
                 self.on_complete(m, now)
+        self._ready_sync()
 
     def on_nack(self, epsn: int, now: float) -> None:
         """Go-back-N: everything < ePSN is acked; retransmit from ePSN."""
@@ -187,6 +211,7 @@ class QP:
             self.retransmitted += pk.psn_sub(self.snd_nxt, epsn)
             self.snd_nxt = epsn
         self.timer_deadline = now + self.rto
+        self._ready_sync()
 
     def on_cnp(self, now: float) -> None:
         self.rate.on_cnp(now)
@@ -198,6 +223,7 @@ class QP:
         self.retransmitted += pk.psn_sub(self.snd_nxt, self.snd_una)
         self.snd_nxt = self.snd_una
         self.timer_deadline = now + self.rto
+        self._ready_sync()
 
     # ----------------------------------------------------------- receiver
 
@@ -210,16 +236,20 @@ class QP:
         if p.ecn and now - self.last_cnp_t >= self.cnp_interval:
             self.last_cnp_t = now
             out.append(pk.cnp_packet(self.ip, p.src_ip, dst_qpn=p.src_qpn))
-        if p.psn == self.rq_psn:
-            if p.op == "write" and p.psn == 0 or p.op == "write":
-                # RETH check on WRITE packets (first of request carries it;
-                # our per-packet va/rkey keeps the model simple)
+        rq = self.rq_psn
+        if p.psn == rq:
+            if p.op == "write":
+                # RETH check on WRITE packets (the first packet of a
+                # request carries it on the wire; our per-packet va/rkey
+                # keeps the model simple, so every packet is checked)
                 if p.rkey and p.rkey not in self.mrs:
                     self.mr_violations += 1
                     return out          # silently dropped (§3.3)
-            self.rq_psn = pk.psn_add(self.rq_psn, 1)
+            self.rq_psn = rq = (rq + 1) % pk.PSN_MOD
             self.nack_outstanding = False
-            self.delivered_bytes += max(p.size - pk.HDR, 0)
+            size = p.size - pk.HDR
+            if size > 0:
+                self.delivered_bytes += size
             self.unacked_in += 1
             if p.last and self.on_deliver:
                 self.deliveries.append((p.msg_id, now))
@@ -227,18 +257,18 @@ class QP:
             if p.last or self.unacked_in >= self.ack_freq:
                 self.unacked_in = 0
                 out.append(pk.ack_packet(self.ip, p.src_ip,
-                                         pk.psn_sub(self.rq_psn, 1),
+                                         (rq - 1) % pk.PSN_MOD,
                                          dst_qpn=p.src_qpn))
-        elif pk.psn_gt(self.rq_psn, p.psn):
+        elif rq != p.psn and (rq - p.psn) % pk.PSN_MOD < pk.PSN_WINDOW:
             # duplicate (sender went back further than our loss): re-ACK
             out.append(pk.ack_packet(self.ip, p.src_ip,
-                                     pk.psn_sub(self.rq_psn, 1),
+                                     (rq - 1) % pk.PSN_MOD,
                                      dst_qpn=p.src_qpn))
         else:
             # gap: NACK once per go-back-N round
             if not self.nack_outstanding:
                 self.nack_outstanding = True
-                out.append(pk.nack_packet(self.ip, p.src_ip, self.rq_psn,
+                out.append(pk.nack_packet(self.ip, p.src_ip, rq,
                                           dst_qpn=p.src_qpn))
         return out
 
@@ -250,5 +280,6 @@ class QP:
             self.sq_psn = self.rq_psn
             self.snd_una = self.rq_psn
             self.snd_nxt = self.rq_psn
+            self._ready_sync()
         else:
             self.rq_psn = self.sq_psn

@@ -79,6 +79,9 @@ ACK clocking) exist only in the packet engine.
 from __future__ import annotations
 
 import math
+import os
+import pickle
+import traceback
 import warnings
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, \
     Tuple, runtime_checkable
@@ -109,16 +112,25 @@ class SimEngine(Protocol):
         ...
 
     def run_many(self, scenarios: Sequence[Callable[["SimEngine"], None]],
-                 timeout: float = 30.0) -> List[float]:
+                 timeout: float = 30.0,
+                 workers: Optional[int] = None) -> List[float]:
         """Stage-then-batch: each callable stages ops on this engine;
         all scenarios then run as independent experiments (no
         cross-scenario bandwidth sharing).  Returns the engine clock at
         each scenario's completion — compute metrics from the records
-        (relative to their ``t_submit``), not from these values."""
+        (relative to their ``t_submit``), not from these values.
+
+        ``workers`` requests scenario-level parallelism where the
+        backend supports it (the packet engine forks worker processes;
+        the flow engine already batches every scenario into one vmapped
+        solve and ignores it).  ``None`` keeps the deterministic serial
+        path; results are identical either way."""
         ...
 
     def run_workloads(self, workloads: Sequence[Workload],
-                      timeout: float = 30.0) -> List[List[MsgRecord]]:
+                      timeout: float = 30.0,
+                      workers: Optional[int] = None
+                      ) -> List[List[MsgRecord]]:
         """Run each Workload as one independent scenario; returns the
         per-op records of each workload, in op order."""
         ...
@@ -149,7 +161,9 @@ class _WorkloadStaging:
         return self._stage_overlay(op, transport)
 
     def run_workloads(self, workloads: Sequence[Workload],
-                      timeout: float = 30.0) -> List[List[MsgRecord]]:
+                      timeout: float = 30.0,
+                      workers: Optional[int] = None
+                      ) -> List[List[MsgRecord]]:
         out: List[List[MsgRecord]] = [[] for _ in workloads]
 
         def scenario(wl: Workload, recs: List[MsgRecord]):
@@ -158,7 +172,8 @@ class _WorkloadStaging:
             return fn
 
         self.run_many([scenario(wl, recs)
-                       for wl, recs in zip(workloads, out)], timeout)
+                       for wl, recs in zip(workloads, out)], timeout,
+                      workers=workers)
         return out
 
     # ------------------------------------------------- deprecated shims
@@ -395,12 +410,12 @@ class PacketEngine(_WorkloadStaging):
         return sim.now
 
     def _quiesce(self, timeout: float) -> None:
-        """Restore independent-experiment semantics between serial
-        scenarios: drain residual events (stray ACKs, armed timers),
-        then reset the clock and every clock-bearing piece of state
-        (NIC egress reservations, rate-pacing gates, DCQCN rate
-        machines, switch CNP aging) so the next scenario starts on a
-        fresh fabric — matching the flow engine's isolated scenarios.
+        """Restore independent-experiment semantics between scenarios:
+        drain residual events (stray ACKs, armed timers), then reset the
+        clock and every clock-bearing piece of state (NIC egress
+        reservations, rate-pacing gates, DCQCN rate machines, switch CNP
+        counters and aging) so the next scenario starts on a fresh
+        fabric — matching the flow engine's isolated scenarios.
         Connection state (groups, QPs, PSNs) survives: registration is
         setup the paper excludes from steady-state measurements."""
         sim = self.net.sim
@@ -412,14 +427,13 @@ class PacketEngine(_WorkloadStaging):
         # let them fire into the next scenario off the reset clock
         sim._q.clear()
         sim.now = 0.0
-        sim._free.clear()
+        sim.reset_free()
         for host in sim.hosts.values():
             host._kick_t = math.inf
             for qp in host.qps.values():
                 qp.next_emit_t = 0.0
                 qp.timer_deadline = math.inf
-                if hasattr(qp, "_timer_ev"):
-                    qp._timer_ev = math.inf
+                qp._timer_ev = math.inf
                 qp.rate.rate = qp.rate.peak
                 qp.rate.alpha = 1.0
                 qp.rate.last_cnp = -math.inf
@@ -427,19 +441,165 @@ class PacketEngine(_WorkloadStaging):
                 qp.last_cnp_t = -math.inf
         for sw in sim.switches.values():
             sw._cnp_t.clear()
+            for t in sw.tables.tables.values():
+                t.cnp_count.clear()
 
-    def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0
-                 ) -> List[float]:
-        """Serial fallback with independent-experiment semantics: each
-        scenario runs on a quiesced fabric with the clock reset to 0
+    # --------------------------------------------- scenario batch driving
+
+    def _scenario_counters(self) -> Tuple[int, int, int, int, int]:
+        sim = self.net.sim
+        no_qp = sum(h.no_qp_drops for h in sim.hosts.values())
+        rtx = sum(q.retransmitted for h in sim.hosts.values()
+                  for q in h.qps.values())
+        return (sim.events, sim.dropped, sim.tx_bytes, no_qp, rtx)
+
+    def _run_scenario(self, index: int, staged: List, pending: List,
+                      timeout: float) -> Tuple[float, Dict[str, int]]:
+        """Drive one staged scenario on a quiesced fabric with its own
+        deterministic RNG stream (seed ⊕ scenario index — never the
+        residue of earlier scenarios' draws), so the result does not
+        depend on which scenarios ran before it in this process.  That
+        invariance is what makes the serial and process-parallel paths
+        bit-identical, and it turns the scenario index into a free
+        multi-seed axis for the loss sweeps."""
+        sim = self.net.sim
+        self._quiesce(timeout)
+        sim.reseed_scenario(index)
+        before = self._scenario_counters()
+        self._staged, self._pending = staged, pending
+        end = self.run(timeout)
+        after = self._scenario_counters()
+        stats = {"events": after[0] - before[0],
+                 "dropped": after[1] - before[1],
+                 "tx_bytes": after[2] - before[2],
+                 "no_qp_drops": after[3] - before[3],
+                 "retransmitted": after[4] - before[4]}
+        return end, stats
+
+    def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0,
+                 workers: Optional[int] = None) -> List[float]:
+        """Independent-experiment scenario batch.
+
+        Every scenario is staged first (staging is silent: group
+        registration traffic runs, data submission thunks are
+        deferred), then each scenario is driven on a quiesced fabric
+        with the clock reset to 0 and a per-scenario RNG stream
         (groups/QPs are reused across scenarios; records measure
-        relative to their own ``t_submit``)."""
-        ends = []
-        for i, stage in enumerate(scenarios):
-            if i:
-                self._quiesce(timeout)
+        relative to their own ``t_submit``).
+
+        ``workers=None`` (default) keeps the serial path.  ``workers=0``
+        uses one process per CPU; ``workers=N`` forks N worker
+        processes, each driving a round-robin share of the scenarios on
+        a copy-on-write image of the staged engine and shipping record
+        times + counter deltas back over a pipe.  Scenario records and
+        the per-scenario ``last_run_stats`` deltas (events / dropped /
+        tx_bytes / no_qp_drops / retransmitted) are bit-identical
+        between the two paths — the determinism tests assert it.  The
+        parent folds only the engine-level aggregates (``sim.events`` /
+        ``dropped`` / ``tx_bytes``) back; per-host ``no_qp_drops`` and
+        per-QP ``retransmitted`` attribution stays in the workers, so
+        after a parallel run read those from ``last_run_stats``, not
+        from the (never-driven) parent objects.  On platforms without
+        ``fork`` the call silently degrades to serial.  Caveat: forking
+        a process whose threads hold locks is never fully safe in
+        CPython — workers touch only the pure-Python simulator and exit
+        via ``os._exit``, which has been robust in practice even with
+        JAX loaded, but pass ``workers=None``/``1`` if your embedding
+        process cannot tolerate ``fork``."""
+        metas: List[Tuple[List, List]] = []
+        for stage in scenarios:
             stage(self)
-            ends.append(self.run(timeout))
+            metas.append((self._staged, self._pending))
+            self._staged, self._pending = [], []
+        if workers is not None and workers == 0:
+            workers = os.cpu_count() or 1
+        workers = min(workers or 1, len(metas))
+        if workers > 1 and hasattr(os, "fork"):
+            return self._run_many_parallel(metas, timeout, workers)
+        ends: List[float] = []
+        stats: List[Dict[str, int]] = []
+        for i, (staged, pending) in enumerate(metas):
+            end, st = self._run_scenario(i, staged, pending, timeout)
+            ends.append(end)
+            stats.append(st)
+        self.last_run_stats = stats
+        return ends
+
+    def _run_many_parallel(self, metas: List[Tuple[List, List]],
+                           timeout: float, workers: int) -> List[float]:
+        """Fork-based scenario parallelism (quiesce makes scenarios
+        independent experiments, so they partition freely).  Each child
+        inherits the fully-staged engine copy-on-write, drives scenarios
+        ``w, w+workers, ...`` exactly like the serial path, and pickles
+        back per-record completion times plus counter deltas; the parent
+        back-fills the caller's records and folds the deltas into its
+        own (never-driven) simulator counters."""
+        children = []
+        for w in range(workers):
+            r_fd, w_fd = os.pipe()
+            pid = os.fork()
+            if pid == 0:                                  # ---- child
+                status = 1
+                try:
+                    os.close(r_fd)
+                    out = []
+                    for i in range(w, len(metas), workers):
+                        staged, pending = metas[i]
+                        end, st = self._run_scenario(i, staged, pending,
+                                                     timeout)
+                        out.append((i, end, st,
+                                    [(r.msg_id, r.t_submit, r.t_sender_cqe,
+                                      dict(r.t_deliver))
+                                     for r, _, _ in pending]))
+                    blob = pickle.dumps(("ok", out),
+                                        protocol=pickle.HIGHEST_PROTOCOL)
+                    with os.fdopen(w_fd, "wb") as fh:
+                        fh.write(blob)
+                    status = 0
+                except BaseException:
+                    try:
+                        blob = pickle.dumps(
+                            ("err", traceback.format_exc()))
+                        with os.fdopen(w_fd, "wb") as fh:
+                            fh.write(blob)
+                    except BaseException:
+                        pass
+                finally:
+                    os._exit(status)
+            os.close(w_fd)                                # ---- parent
+            children.append((pid, r_fd))
+        sim = self.net.sim
+        ends = [0.0] * len(metas)
+        stats: List[Optional[Dict[str, int]]] = [None] * len(metas)
+        errors = []
+        for pid, r_fd in children:
+            with os.fdopen(r_fd, "rb") as fh:
+                blob = fh.read()
+            os.waitpid(pid, 0)
+            if not blob:
+                errors.append(f"worker {pid} died without reporting")
+                continue
+            tag, payload = pickle.loads(blob)
+            if tag == "err":
+                errors.append(payload)
+                continue
+            for i, end, st, rec_times in payload:
+                ends[i] = end
+                stats[i] = st
+                for (rec, _, _), (mid, t_sub, t_cqe, deliver) in zip(
+                        metas[i][1], rec_times):
+                    rec.msg_id = mid
+                    rec.t_submit = t_sub
+                    rec.t_sender_cqe = t_cqe
+                    rec.t_deliver.clear()
+                    rec.t_deliver.update(deliver)
+                sim.events += st["events"]
+                sim.dropped += st["dropped"]
+                sim.tx_bytes += st["tx_bytes"]
+        if errors:
+            raise RuntimeError("parallel run_many worker failed:\n"
+                               + "\n".join(errors))
+        self.last_run_stats = stats
         return ends
 
 
@@ -687,14 +847,16 @@ class FlowEngine(_WorkloadStaging):
         self._staged, self._post = [], []
         return self.now
 
-    def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0
-                 ) -> List[float]:
+    def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0,
+                 workers: Optional[int] = None) -> List[float]:
         """Batched scenarios: every scenario is an isolated fabric (no
         cross-scenario bandwidth sharing) whose clock starts at the
         engine's current ``now``.  On the JAX solver the whole batch is
         ONE vmapped solve (``solve_many``); the numpy solver falls back
-        to per-scenario solves.  Returns per-scenario end times; the
-        engine clock advances to the latest one."""
+        to per-scenario solves.  ``workers`` is accepted for contract
+        uniformity and ignored — the vmapped solve already exploits all
+        device parallelism.  Returns per-scenario end times; the engine
+        clock advances to the latest one."""
         if self._staged or self._post:
             raise RuntimeError("pending staged ops; run() them first or "
                                "stage them inside a scenario")

@@ -62,15 +62,25 @@ class GroupTable:
     # uninstalling the group can release its share of the switch-wide
     # port-utilization counters (Alg. 4's load-balancing input)
     port_refs: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # --- Alg. 3 hot-path caches (simulator-internal, not Fig. 5 state):
+    # ``agg_entries_cache`` is the entry list excluding the source-facing
+    # port; ``agg_min`` is (min ack_psn over that list, owning port).
+    # ``ack_psn`` values only advance, so the minimum is stable until the
+    # owning entry itself advances — both caches are invalidated on entry
+    # or ``ack_out_port`` changes and rebuilt lazily by the switch.
+    agg_entries_cache: Optional[list] = None
+    agg_min: Optional[tuple] = None
 
     def add_connected(self, port: int, dest_ip: int, dest_qpn: int,
                       va: int = 0, rkey: int = 0):
         self.entries[port] = PortEntry(port, CONNECTED, dest_ip, dest_qpn,
                                        va, rkey)
+        self.agg_entries_cache = self.agg_min = None
 
     def add_forwarded(self, port: int):
         if port not in self.entries:
             self.entries[port] = PortEntry(port, FORWARDED)
+            self.agg_entries_cache = self.agg_min = None
 
     # ------------------------------------------------------------ queries
 
@@ -121,8 +131,8 @@ class ForwardingTables:
 
     def get(self, group_ip: int) -> Optional[GroupTable]:
         t = self.tables.get(group_ip)
-        if t is not None:
-            self._touch(group_ip)
+        if t is not None and self.capacity is not None:
+            self._touch(group_ip)       # LRU order only matters under a cap
         return t
 
     def create(self, group_ip: int) -> GroupTable:

@@ -71,25 +71,29 @@ class GleamSwitch:
         self.cnp_tau = cnp_aging_tau
         self._cnp_t: Dict[Tuple[int, int], float] = {}  # (group, port) -> t
         self.p4_mode = p4_mode
+        # unicast next-hop memo: (dst_ip, flow_key) -> port or None.  The
+        # topology is immutable during a run and every forwarded packet
+        # of a connection hits the same pair, so the route is computed
+        # once instead of per packet.
+        self._nh_memo: Dict[Tuple[int, int], Optional[int]] = {}
 
     # --------------------------------------------------------- entry point
 
     def on_packet(self, p: pk.Packet, in_port: int, now: float) -> List[Emit]:
-        if p.kind == pk.ENVELOPE:
+        kind = p.kind
+        if kind == pk.ENVELOPE:
             return self._envelope(p, in_port, now)
         t = self.tables.get(p.dst_ip)
         if t is None:
             return self._unicast(p)
-        if p.kind == pk.DATA:
+        if kind == pk.DATA:
             return self._data(t, p, in_port, now)
-        if p.kind == pk.ACK:
+        if kind == pk.ACK:
             return self._ack(t, p, in_port, now)
-        if p.kind == pk.NACK:
+        if kind == pk.NACK:
             return self._nack(t, p, in_port, now)
-        if p.kind == pk.CNP:
+        if kind == pk.CNP:
             return self._cnp(t, p, in_port, now)
-        if p.kind == pk.ENVELOPE:
-            return self._envelope(p, in_port, now)
         return self._unicast(p)
 
     def route_envelope(self, p: pk.Packet, in_port: int,
@@ -114,11 +118,15 @@ class GleamSwitch:
     def _unicast(self, p: pk.Packet) -> List[Emit]:
         if p.kind == pk.ENVELOPE:
             return []  # envelopes are consumed by _envelope
-        host = self.ip_host.get(p.dst_ip)
-        if host is None:
+        key = (p.dst_ip, p.src_ip * 131 + p.dst_qpn)
+        port = self._nh_memo.get(key, -1)
+        if port == -1:
+            host = self.ip_host.get(p.dst_ip)
+            port = None if host is None else self.topo.next_hop_port(
+                self.name, host, flow_key=key[1])
+            self._nh_memo[key] = port
+        if port is None:
             return []
-        port = self.topo.next_hop_port(
-            self.name, host, flow_key=p.src_ip * 131 + p.dst_qpn)
         return [(port, p)]
 
     def _data(self, t: GroupTable, p: pk.Packet, in_port: int,
@@ -129,6 +137,7 @@ class GleamSwitch:
             # first data packet, or multicast source switched (Appendix B):
             # feedback must now exit through the new ingress port.
             t.ack_out_port = in_port
+            t.agg_entries_cache = t.agg_min = None
         if p.op == "mr_update" and isinstance(p.payload, dict):
             # §3.3: the extra WRITE message carrying per-receiver MR info.
             # Update connected entries, then forward it as normal data so
@@ -156,8 +165,23 @@ class GleamSwitch:
 
     def _agg_entries(self, t: GroupTable):
         """Entries that participate in aggregation: every tree port except
-        the one facing the current source (it never ACKs)."""
-        return [e for e in t.entries.values() if e.port != t.ack_out_port]
+        the one facing the current source (it never ACKs).  Cached on the
+        table; invalidated when entries or ``ack_out_port`` change."""
+        lst = t.agg_entries_cache
+        if lst is None:
+            lst = t.agg_entries_cache = [
+                e for e in t.entries.values() if e.port != t.ack_out_port]
+        return lst
+
+    def _advance_ack_psn(self, t: GroupTable, e, psn: int, w: int) -> None:
+        """Cumulative per-port state (Alg. 2): ``ack_psn`` only moves
+        forward.  The cached aggregate minimum survives unless the entry
+        holding it is the one advancing."""
+        if (psn - e.ack_psn) % pk.PSN_MOD < w:          # psn_geq, inlined
+            e.ack_psn = psn
+            agg = t.agg_min
+            if agg is not None and agg[1] == e.port:
+                t.agg_min = None
 
     def _ack(self, t: GroupTable, p: pk.Packet, in_port: int,
              now: float) -> List[Emit]:
@@ -166,9 +190,11 @@ class GleamSwitch:
         e = t.entries.get(in_port)
         if e is None or t.ack_out_port is None:
             return []
-        w = t.psn_window
-        if pk.psn_geq(p.psn, e.ack_psn, w):
-            e.ack_psn = p.psn
+        self._advance_ack_psn(t, e, p.psn, t.psn_window)
+        agg = t.agg_min
+        if agg is not None and agg[0] == t.last_ack_psn \
+                and t.nack_epsn is None:
+            return []       # aggregate unchanged: Alg. 3 emits nothing
         return self._generate(t, now)
 
     def _nack(self, t: GroupTable, p: pk.Packet, in_port: int,
@@ -180,26 +206,39 @@ class GleamSwitch:
             return []
         w = t.psn_window
         implied = pk.psn_sub(p.psn, 1)          # NACK acks everything < ePSN
-        if pk.psn_geq(implied, e.ack_psn, w):
-            e.ack_psn = implied
+        self._advance_ack_psn(t, e, implied, w)
         if t.nack_epsn is None or pk.psn_geq(t.nack_epsn, p.psn, w):
             t.nack_epsn = p.psn
         return self._generate(t, now)
 
     def _generate(self, t: GroupTable, now: float) -> List[Emit]:
         """Algorithm 3: aggregated ACK when the minimum advances; NACK only
-        when all receivers acked everything below its expected PSN."""
+        when all receivers acked everything below its expected PSN.
+
+        The minimum over per-port ``ack_psn`` is cached in ``t.agg_min``:
+        per-port cumulative ACKs only advance, so a full rescan is needed
+        only when the entry that owned the minimum advances (or the entry
+        set / source port changes) — every other feedback packet leaves
+        the aggregate untouched.  This turns the per-ACK cost from
+        O(ports) to amortized O(1), bit-identical to the full scan."""
         entries = self._agg_entries(t)
         if not entries:
             return []
         w = t.psn_window
-        mn, mport = entries[0].ack_psn, entries[0].port
-        for e in entries[1:]:
-            m2 = pk.psn_min(mn, e.ack_psn, w)
-            if m2 != mn:
-                mn, mport = e.ack_psn, e.port
+        M = pk.PSN_MOD
+        agg = t.agg_min
+        if agg is None:
+            e0 = entries[0]
+            mn, mport = e0.ack_psn, e0.port
+            for e in entries[1:]:
+                a = e.ack_psn
+                if a != mn and (mn - a) % M < w:        # psn_gt(mn, a)
+                    mn, mport = a, e.port
+            t.agg_min = (mn, mport)
+        else:
+            mn = agg[0]
         out: List[Emit] = []
-        if pk.psn_gt(mn, t.last_ack_psn, w):
+        if mn != t.last_ack_psn and (mn - t.last_ack_psn) % M < w:
             out.append((t.ack_out_port,
                         self._feedback(t, pk.ack_packet(t.group_ip,
                                                         t.group_ip, mn))))

@@ -1,9 +1,11 @@
 #!/usr/bin/env python3
-"""Flow-solver performance tracking — writes BENCH_flowsim.json.
+"""Engine performance tracking — writes BENCH_flowsim.json /
+BENCH_packetsim.json.
 
-Times the fixed fig14 workload (HPL scales 8/16/32 on the flow engine,
-1024-host fat-tree) through two solver paths, each in its OWN
-subprocess so neither warms the other's topology/routing/jit caches:
+``--engine flow`` (default) times the fixed fig14 workload (HPL scales
+8/16/32 on the flow engine, 1024-host fat-tree) through two solver
+paths, each in its OWN subprocess so neither warms the other's
+topology/routing/jit caches:
 
 - **before** — the PR-1 solver discipline: one engine + one solve per
   scenario, shape bucketing off, fresh topology per scenario, no
@@ -15,30 +17,42 @@ subprocess so neither warms the other's topology/routing/jit caches:
   process against the now-warm directory (the steady state every run
   after the first sees).
 
-Every measurement is the sweep wall-clock around ``fig14_scale.run()``
-(imports excluded — the same basis as the time fig14 prints).  Inside
-each subprocess the sweep runs twice; pass2 hits the in-process jit
-cache, so ``pass1 - pass2`` estimates compile cost, and the solver's
-own device time (``flowsim_jax.SOLVE_STATS``) splits python staging
-from solve.
+``--engine packet`` times the packet engine's hot path on fig15 loss
+points (the fidelity regime only it can simulate):
 
-``--before-git REF`` additionally times the ACTUAL code at a git ref
-(e.g. the PR-1 commit) via ``git archive``, same basis, for a
-ground-truth baseline.
+- **single** — one (group, loss) gleam bcast point, wall around
+  ``run()`` (staging/registration excluded — the same basis at every
+  ref), two fresh engines per child process;
+- **sweep**  — the multi-seed fig15 batch (both sweep points x
+  ``seeds`` repetitions) through ``run_many``, serial (workers=1) vs
+  scenario-parallel (one worker process per CPU).  The serial and
+  parallel record streams are asserted IDENTICAL — the bench doubles
+  as a determinism tripwire;
+- **before_git** — the same single points (and the per-point serial
+  basis for the sweep estimate: the old engine had no multi-seed
+  batching, so its sweep cost is seeds x the measured single-point
+  wall) at the actual tree of ``--before-git REF``.
 
-    PYTHONPATH=src python tools/bench.py                     # full
+Every measurement excludes imports, and the ``env`` block records git
+sha, interpreter/library versions and platform so numbers are
+attributable.
+
+    PYTHONPATH=src python tools/bench.py                     # flow, full
     PYTHONPATH=src python tools/bench.py --before-git HEAD~1 # + git ref
     PYTHONPATH=src python tools/bench.py --smoke             # CI-sized
+    PYTHONPATH=src python tools/bench.py --engine packet --before-git REF
+    PYTHONPATH=src python tools/bench.py --engine packet --smoke
 
-``--smoke`` shrinks the workload (one small scale, batched path only)
-and still writes the json — CI uses it to catch perf-path regressions
-(import errors, recompile storms) rather than to produce numbers.
+``--smoke`` shrinks the workload and still writes the json — CI uses it
+to catch perf-path regressions (import errors, recompile storms, a
+broken parallel path) rather than to produce numbers.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import platform
 import re
 import shutil
 import subprocess
@@ -58,8 +72,48 @@ DEFAULT_SCALES = (8, 16, 32)
 _JAX_CACHE_VARS = ("JAX_COMPILATION_CACHE_DIR",
                    "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS")
 
+# packet bench workloads: fig15 points (group, loss).  The 512-host
+# point is the headline (feedback aggregation scales with group size);
+# the sweep uses the cheaper 64-host points at seeds repetitions.
+PACKET_SINGLE_POINTS = ((512, 1e-4), (64, 1e-3))
+PACKET_SWEEP_POINTS = ((64, 1e-4), (64, 1e-3))
+PACKET_SWEEP_SEEDS = 6
+PACKET_SMOKE_POINT = (16, 1e-3)
+PACKET_SMOKE_SEEDS = 2
 
-# ----------------------------------------------------- child measurement
+
+def _env_info() -> dict:
+    """Provenance block shared by both bench outputs."""
+    def _git(*args):
+        try:
+            return subprocess.run(
+                ["git", *args], cwd=REPO, capture_output=True, text=True,
+                check=True).stdout.strip()
+        except Exception:
+            return None
+
+    info = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "git_sha": _git("rev-parse", "HEAD"),
+        "git_dirty": bool(_git("status", "--porcelain")),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import numpy
+        info["numpy"] = numpy.__version__
+    except Exception:
+        info["numpy"] = None
+    try:
+        import jax
+        info["jax"] = jax.__version__
+    except Exception:
+        info["jax"] = None
+    return info
+
+
+# ------------------------------------------------ flow child measurement
 
 def _timed_sweep(scales, batched: bool, bucketing: bool) -> dict:
     """One fig14 sweep in-process; wall/solve/python split + shapes."""
@@ -88,7 +142,7 @@ def _timed_sweep(scales, batched: bool, bucketing: bool) -> dict:
     }
 
 
-def _child_main(kind: str, scales) -> int:
+def _child_flow(kind: str, scales) -> int:
     """Two passes: pass1 pays compilation, pass2 hits the jit cache."""
     if kind == "serial":
         # PR-1 discipline also rebuilt the topology on every scenario
@@ -106,25 +160,86 @@ def _child_main(kind: str, scales) -> int:
     return 0
 
 
+# ---------------------------------------------- packet child measurement
+
+def _packet_single(group: int, loss: float) -> dict:
+    """Wall around ``run()`` of one staged fig15 gleam point — the same
+    basis as the git-ref driver below."""
+    from benchmarks.fig15_16_loss import _point
+    eng, rec = _point(group, loss, "gleam")
+    t0 = time.perf_counter()
+    eng.run(timeout=240.0)
+    wall = time.perf_counter() - t0
+    sim = eng.net.sim
+    return {"group": group, "loss": loss, "wall_s": round(wall, 4),
+            "jct_ms": rec.jct(group - 1) * 1e3,     # full precision:
+            "events": sim.events, "dropped": sim.dropped}  # ref-compared
+
+
+def _packet_sweep(points, seeds: int, workers) -> dict:
+    """The multi-seed fig15 batch through run_many; returns per-point
+    mean/std and the raw per-seed JCTs — the serial==parallel assertion
+    compares those record for record, so a scenario-index permutation
+    in the parallel scheduler cannot hide behind identical aggregates."""
+    from benchmarks.fig15_16_loss import _sweep_point
+    out = {"points": [], "jcts": [], "wall_s": 0.0}
+    t0 = time.perf_counter()
+    for group, loss in points:
+        mean, std, jcts = _sweep_point(group, loss, "gleam", seeds,
+                                       workers, 240.0)
+        out["points"].append({"group": group, "loss": loss,
+                              "mean_ms": round(mean * 1e3, 6),
+                              "std_ms": round(std * 1e3, 6),
+                              "seeds": seeds})
+        out["jcts"].append(jcts)
+    out["wall_s"] = round(time.perf_counter() - t0, 4)
+    return out
+
+
+def _child_packet(kind: str, spec: dict) -> int:
+    if kind == "packet-single":
+        res = {"passes": [_packet_single(spec["group"], spec["loss"])
+                          for _ in range(2)]}
+    elif kind == "packet-sweep":
+        res = _packet_sweep([tuple(p) for p in spec["points"]],
+                            spec["seeds"], spec["workers"])
+    else:
+        raise ValueError(kind)
+    print(json.dumps(res))
+    return 0
+
+
 # ---------------------------------------------------- parent orchestration
 
-def _run_child(kind: str, scales, env_extra: dict) -> dict:
+def _run_child(kind: str, env_extra: dict, *, scales=None,
+               spec: dict = None) -> dict:
     env = dict(os.environ, **env_extra)
     env = {k: v for k, v in env.items() if v != ""}   # "" = unset
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
         env.get("PYTHONPATH", "")
-    out = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), "--_child", kind,
-         "--scales", ",".join(str(s) for s in scales)],
-        capture_output=True, text=True, env=env, cwd=REPO, check=True)
+    argv = [sys.executable, os.path.abspath(__file__), "--_child", kind]
+    if scales is not None:
+        argv += ["--scales", ",".join(str(s) for s in scales)]
+    if spec is not None:
+        argv += ["--_spec", json.dumps(spec)]
+    out = subprocess.run(argv, capture_output=True, text=True, env=env,
+                         cwd=REPO, check=True)
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-def _run_git_ref(ref: str, scales) -> dict:
-    """Time the sweep of the ACTUAL tree at ``ref``, same basis as the
-    in-tree measurements (wall around ``fig14_scale.run()``, imports
-    excluded) and the same ``scales``."""
+def _git_ref_tree(ref: str) -> str:
     tmp = tempfile.mkdtemp(prefix="bench-ref-")
+    tar = subprocess.run(["git", "archive", ref], cwd=REPO,
+                         capture_output=True, check=True)
+    subprocess.run(["tar", "-x", "-C", tmp], input=tar.stdout, check=True)
+    return tmp
+
+
+def _run_git_ref_flow(ref: str, scales) -> dict:
+    """Time the fig14 sweep of the ACTUAL tree at ``ref``, same basis as
+    the in-tree measurements (wall around ``fig14_scale.run()``, imports
+    excluded) and the same ``scales``."""
+    tmp = _git_ref_tree(ref)
     driver = (
         "import sys, time\n"
         "sys.path.insert(0, 'src')\n"
@@ -134,10 +249,6 @@ def _run_git_ref(ref: str, scales) -> dict:
         f"fig14_scale.run(rows, engine='flow', scales={tuple(scales)!r})\n"
         "print('sweep done in %.4fs' % (time.perf_counter() - t0))\n")
     try:
-        tar = subprocess.run(["git", "archive", ref], cwd=REPO,
-                             capture_output=True, check=True)
-        subprocess.run(["tar", "-x", "-C", tmp], input=tar.stdout,
-                       check=True)
         walls = []
         env = dict(os.environ, REPRO_JAX_CACHE="0")
         for k in ("PYTHONPATH", *_JAX_CACHE_VARS):
@@ -153,48 +264,63 @@ def _run_git_ref(ref: str, scales) -> dict:
         shutil.rmtree(tmp, ignore_errors=True)
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized: one small scale, batched path only")
-    ap.add_argument("--scales", default=None,
-                    help="comma-separated sweep scales "
-                         f"(default {DEFAULT_SCALES})")
-    ap.add_argument("--before-git", default=None, metavar="REF",
-                    help="also time the actual tree at a git ref "
-                         "(ground-truth PR-1 baseline)")
-    ap.add_argument("--out", default=os.path.join(REPO,
-                                                  "BENCH_flowsim.json"))
-    ap.add_argument("--_child", default=None,
-                    choices=("batched", "serial"), help=argparse.SUPPRESS)
-    args = ap.parse_args(argv)
+def _run_git_ref_packet(ref: str, points) -> dict:
+    """Time fig15 single points at the actual tree of ``ref`` — the
+    ``_point``+``run()`` basis (both trees carry that helper)."""
+    tmp = _git_ref_tree(ref)
+    results = []
+    try:
+        env = dict(os.environ)
+        env.pop("PYTHONPATH", None)
+        for group, loss in points:
+            driver = (
+                "import sys, time\n"
+                "sys.path.insert(0, 'src'); sys.path.insert(0, '.')\n"
+                "from benchmarks.fig15_16_loss import _point\n"
+                f"eng, rec = _point({group}, {loss!r}, 'gleam')\n"
+                "t0 = time.perf_counter()\n"
+                "eng.run(timeout=240.0)\n"
+                "print('point done in %.4fs jct %.9g'\n"
+                f"      % (time.perf_counter() - t0, rec.jct({group}-1)))\n")
+            out = subprocess.run([sys.executable, "-c", driver],
+                                 capture_output=True, text=True,
+                                 env=env, cwd=tmp, check=True)
+            m = re.search(r"done in ([0-9.]+)s jct ([0-9.e+-]+)",
+                          out.stdout)
+            results.append({"group": group, "loss": loss,
+                            "wall_s": float(m.group(1)) if m else -1.0,
+                            "jct_ms": float(m.group(2)) * 1e3
+                            if m else -1.0})
+        return {"ref": ref, "points": results}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
+
+# ------------------------------------------------------------ engines
+
+def _main_flow(args, result: dict) -> None:
     scales = tuple(int(s) for s in args.scales.split(",")) \
         if args.scales else ((8,) if args.smoke else DEFAULT_SCALES)
-    if args._child:
-        return _child_main(args._child, scales)
-
-    result = {
-        "workload": {"figure": "fig14", "engine": "flow",
-                     "scales": list(scales), "smoke": args.smoke},
-        "env": {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
-    }
-    t_all = time.perf_counter()
+    result["workload"] = {"figure": "fig14", "engine": "flow",
+                          "scales": list(scales), "smoke": args.smoke}
     cache_dir = tempfile.mkdtemp(prefix="bench-jax-cache-")
     try:
         if not args.smoke:
             # before: PR-1 solver discipline, no persistent cache
             no_cache = {"REPRO_JAX_CACHE": "0",
                         **{k: "" for k in _JAX_CACHE_VARS}}
-            result["before"] = _run_child("serial", scales, no_cache)
+            result["before"] = _run_child("serial", no_cache,
+                                          scales=scales)
             if args.before_git:
-                result["before_git"] = _run_git_ref(args.before_git,
-                                                    scales)
+                result["before_git"] = _run_git_ref_flow(args.before_git,
+                                                         scales)
         # after, cold: fresh process + empty compilation-cache dir
         cache_env = {"JAX_COMPILATION_CACHE_DIR": cache_dir}
-        result["after_cold"] = _run_child("batched", scales, cache_env)
+        result["after_cold"] = _run_child("batched", cache_env,
+                                          scales=scales)
         # after, steady state: fresh process, warm cache dir
-        result["after_warm"] = _run_child("batched", scales, cache_env)
+        result["after_warm"] = _run_child("batched", cache_env,
+                                          scales=scales)
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
 
@@ -204,13 +330,6 @@ def main(argv=None) -> int:
             b / result["after_cold"]["pass1"]["wall_s"], 2)
         result["speedup_steady"] = round(
             b / result["after_warm"]["pass1"]["wall_s"], 2)
-    result["bench_wall_s"] = round(time.perf_counter() - t_all, 2)
-
-    with open(args.out, "w", encoding="utf-8") as fh:
-        json.dump(result, fh, indent=2)
-        fh.write("\n")
-    print(json.dumps(result, indent=2))
-    print(f"# wrote {args.out}", file=sys.stderr)
 
     if args.smoke:       # regression tripwires for CI
         cold, warm = result["after_cold"], result["after_warm"]
@@ -219,6 +338,116 @@ def main(argv=None) -> int:
         same = cold["pass1"]["solve_shapes"] == \
             warm["pass1"]["solve_shapes"]
         assert same, "bucketed shapes changed between processes"
+
+
+def _main_packet(args, result: dict) -> None:
+    if args.smoke:
+        points = [PACKET_SMOKE_POINT]
+        sweep_points, seeds = [PACKET_SMOKE_POINT], PACKET_SMOKE_SEEDS
+    else:
+        points = [list(p) for p in PACKET_SINGLE_POINTS]
+        sweep_points = [list(p) for p in PACKET_SWEEP_POINTS]
+        seeds = PACKET_SWEEP_SEEDS
+    result["workload"] = {
+        "figure": "fig15", "engine": "packet", "smoke": args.smoke,
+        "single_points": [list(p) for p in points],
+        "sweep": {"points": [list(p) for p in sweep_points],
+                  "seeds": seeds}}
+
+    result["single"] = [
+        _run_child("packet-single", {},
+                   spec={"group": g, "loss": l})
+        for g, l in points]
+    result["sweep_serial"] = _run_child(
+        "packet-sweep", {},
+        spec={"points": sweep_points, "seeds": seeds, "workers": 1})
+    result["sweep_parallel"] = _run_child(
+        "packet-sweep", {},
+        spec={"points": sweep_points, "seeds": seeds,
+              "workers": os.cpu_count() or 1})
+
+    # determinism tripwire: the serial and parallel sweeps must agree
+    # exactly, record for record
+    assert result["sweep_serial"]["jcts"] == \
+        result["sweep_parallel"]["jcts"], \
+        "serial and parallel run_many diverged"
+    result["speedup_parallel_vs_serial"] = round(
+        result["sweep_serial"]["wall_s"]
+        / result["sweep_parallel"]["wall_s"], 2)
+
+    if args.before_git and not args.smoke:
+        result["before_git"] = _run_git_ref_packet(
+            args.before_git, [tuple(p) for p in points])
+        before_sweep = _run_git_ref_packet(
+            args.before_git, [tuple(p) for p in sweep_points])
+        # the old engine ran scenarios serially at one seed; its
+        # multi-seed sweep cost is seeds x the measured per-point wall
+        est = sum(p["wall_s"] for p in before_sweep["points"]) * seeds
+        result["before_git"]["sweep_points"] = before_sweep["points"]
+        result["before_git"]["sweep_est_s"] = round(est, 4)
+        # headline gates
+        b0 = result["before_git"]["points"][0]
+        a0 = result["single"][0]["passes"]
+        result["speedup_single"] = round(
+            b0["wall_s"] / min(p["wall_s"] for p in a0), 2)
+        result["sweep_reduction_vs_before"] = round(
+            est / result["sweep_parallel"]["wall_s"], 2)
+        # fixed-seed results must be unchanged, ref vs tree
+        for b, s in zip(result["before_git"]["points"],
+                        result["single"]):
+            assert abs(b["jct_ms"] - s["passes"][0]["jct_ms"]) \
+                <= 1e-9 + 1e-6 * abs(b["jct_ms"]), \
+                f"fixed-seed JCT changed vs {args.before_git}: {b} {s}"
+
+    if args.smoke:       # regression tripwires for CI
+        assert result["single"][0]["passes"][0]["events"] > 0
+        assert all(p["mean_ms"] > 0
+                   for p in result["sweep_parallel"]["points"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--engine", choices=("flow", "packet"),
+                    default="flow",
+                    help="which engine's hot path to benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny workload, regression tripwires")
+    ap.add_argument("--scales", default=None,
+                    help="comma-separated fig14 sweep scales, flow only "
+                         f"(default {DEFAULT_SCALES})")
+    ap.add_argument("--before-git", default=None, metavar="REF",
+                    help="also time the actual tree at a git ref "
+                         "(ground-truth baseline)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--_child", default=None,
+                    choices=("batched", "serial", "packet-single",
+                             "packet-sweep"), help=argparse.SUPPRESS)
+    ap.add_argument("--_spec", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args._child in ("batched", "serial"):
+        scales = tuple(int(s) for s in args.scales.split(",")) \
+            if args.scales else DEFAULT_SCALES
+        return _child_flow(args._child, scales)
+    if args._child:
+        return _child_packet(args._child, json.loads(args._spec))
+
+    out_path = args.out or os.path.join(
+        REPO, "BENCH_flowsim.json" if args.engine == "flow"
+        else "BENCH_packetsim.json")
+    result = {"env": _env_info()}
+    t_all = time.perf_counter()
+    if args.engine == "flow":
+        _main_flow(args, result)
+    else:
+        _main_packet(args, result)
+    result["bench_wall_s"] = round(time.perf_counter() - t_all, 2)
+
+    with open(out_path, "w", encoding="utf-8") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"# wrote {out_path}", file=sys.stderr)
     return 0
 
 
