@@ -52,6 +52,7 @@ MODULES = [
     "fig12_13_storage",      # Figs. 12-13 replication IOPS + IO latency
     "fig14_scale",           # Fig. 14 large-scale fat-tree JCT (fluid)
     "fig15_16_loss",         # Figs. 15-16 loss tolerance / goodput
+    "fig_churn",             # membership churn: JCT + recovery time
     "collective_schedules",  # adapted layer: ICI schedule comparison
 ]
 

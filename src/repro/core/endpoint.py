@@ -83,6 +83,12 @@ class QP:
         self.window = window
         self.ack_freq = ack_freq
         self.rto = rto
+        # liveness: a failed member's QP goes dead (deactivate) — the
+        # NIC drops its traffic and the sender side leaves the ready set
+        self.alive = True
+        # mid-stream (re)attach marker: adopt the live stream's PSN at
+        # the next DATA packet instead of NACKing from a stale rqPSN
+        self.sync_next_psn = False
         self.on_complete = on_complete      # (msg, now) sender CQE
         self.on_deliver = on_deliver        # (msg_id, now) receiver done
         # ---- NIC ready-set plumbing (set by packetsim.Host.add_qp):
@@ -122,7 +128,8 @@ class QP:
         h = self._host
         if h is None:
             return
-        if self.sq_psn != self.snd_nxt or self.snd_una != self.sq_psn:
+        if self.alive and (self.sq_psn != self.snd_nxt
+                           or self.snd_una != self.sq_psn):
             h._mark_ready(self)
         else:
             h._mark_idle(self)
@@ -232,6 +239,14 @@ class QP:
 
     def on_data(self, p: pk.Packet, now: float) -> List[pk.Packet]:
         """RoCE receive logic; returns feedback packets to emit."""
+        if self.sync_next_psn:
+            # dynamic join: lock onto the live stream at whatever PSN
+            # arrives first — no reset, no NACK storm for the history
+            # this receiver was never meant to have
+            self.sync_next_psn = False
+            self.rq_psn = p.psn
+            self.unacked_in = 0
+            self.nack_outstanding = False
         out: List[pk.Packet] = []
         if p.ecn and now - self.last_cnp_t >= self.cnp_interval:
             self.last_cnp_t = now
@@ -271,6 +286,26 @@ class QP:
                 out.append(pk.nack_packet(self.ip, p.src_ip, rq,
                                           dst_qpn=p.src_qpn))
         return out
+
+    # ------------------------------------------------- membership (§3.4)
+
+    def rearm_receiver(self) -> None:
+        """Re-arm the receive side against a changed multicast stream
+        WITHOUT a PSN reset: the next DATA packet's PSN becomes the
+        expected PSN.  Used when a member joins a live group (its
+        rqPSN is meaningless relative to the group's stream) — the
+        sender side is untouched, so a later ``master-switch`` still
+        finds a coherent sqPSN to synchronize (Appendix B)."""
+        self.sync_next_psn = True
+        self.nack_outstanding = False
+
+    def deactivate(self) -> None:
+        """Take this QP out of service (receiver failure, or the quiet
+        half of a graceful leave): the NIC drops its traffic, pending
+        timers never fire, and the host's ready set forgets it."""
+        self.alive = False
+        self.timer_deadline = INF
+        self._ready_sync()
 
     # --------------------------------------------------------- Appendix B
 

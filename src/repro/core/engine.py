@@ -278,12 +278,56 @@ class PacketEngine(_WorkloadStaging):
     # ----------------------------------------------------------- lowering
 
     def _stage_native(self, op: GroupOp) -> MsgRecord:
+        if op.events:
+            return self._stage_dynamic(op)
         if op.op == "write":
             return self._stage_group_op(
                 op.members, op.nbytes, op.source,
                 lambda g: g.write(op.nbytes, same_mr=op.same_mr))
         return self._stage_group_op(op.members, op.nbytes, op.source,
                                     lambda g: g.bcast(op.nbytes))
+
+    def _stage_dynamic(self, op: GroupOp) -> MsgRecord:
+        """Dynamic-membership lowering: the op's timed ``MemberEvent``s
+        run natively on the live fabric — each event is an in-sim
+        callback driving the group's membership control plane (in-band
+        MFT-update envelopes, QP re-arm, failure isolation; see
+        ``core/gleam.py``).
+
+        Membership mutates the group, so a dynamic op always gets a
+        FRESH group instead of the per-member-set cache.  The pending
+        record waits for every *surviving* initial receiver (leavers
+        and failed members are excused; joiners deliver from their
+        join point but are not required to complete the in-flight
+        message), which keeps ``run_many``'s quiesce/fork machinery
+        working unchanged — events are scheduled relative to the
+        submission instant inside the deferred thunk."""
+        g = self.net.multicast_group(list(op.members), **self.group_kw)
+        g.register()
+        sim = self.net.sim
+        rec = MsgRecord(-1, op.nbytes, sim.now)
+        events = op.sorted_events()
+
+        def thunk():
+            if op.source is not None and op.source != g.source:
+                g.switch_source(op.source)
+            if op.op == "write":
+                real = g.write(op.nbytes, same_mr=op.same_mr)
+            else:
+                real = g.bcast(op.nbytes)
+            rec.msg_id, rec.t_submit = real.msg_id, real.t_submit
+            g.records[real.msg_id] = rec
+            t0 = sim.now
+            ops = {"join": g.join, "leave": g.leave, "fail": g.fail,
+                   "master-switch": g.master_switch}
+            for ev in events:
+                sim.schedule(t0 + ev.at,
+                             lambda now, fn=ops[ev.kind], m=ev.member:
+                             fn(m, now=now))
+
+        self._staged.append(thunk)
+        self._pending.append((rec, len(op.surviving_receivers()), None))
+        return rec
 
     def _stage_overlay(self, op: GroupOp, transport: Transport) -> MsgRecord:
         """Relay transports run the ``baselines.py`` machinery: QPs are
@@ -627,7 +671,8 @@ class FlowEngine(_WorkloadStaging):
     return propagation.
     """
 
-    def __init__(self, topo: Topology, *, backend: str = "auto", **sim_kw):
+    def __init__(self, topo: Topology, *, backend: str = "auto",
+                 group_kw: Optional[dict] = None, **sim_kw):
         self.topo = topo
         if sim_kw:
             # packet-engine physics (loss_rate, p4_mode, ...) have no
@@ -635,6 +680,10 @@ class FlowEngine(_WorkloadStaging):
             # lossy packet run against an unknowingly lossless flow run
             raise TypeError("flow engines do not support packet-engine "
                             f"options: {sorted(sim_kw)}")
+        # the slice of the packet engine's multicast-group tuning that
+        # the fluid dynamic-membership model consumes (``fail_detect``);
+        # accepted so one make_engine(**kw) dict drives both engines
+        self.group_kw = dict(group_kw or {})
         if backend not in ("auto", "jax", "np", "numpy"):
             raise ValueError(f"unknown flow backend {backend!r}")
         use_jax = False
@@ -706,11 +755,128 @@ class FlowEngine(_WorkloadStaging):
         return self._stage(links, volume, rec, deliver, back)
 
     def _stage_native(self, op: GroupOp) -> MsgRecord:
+        if op.events:
+            return self._stage_dynamic(op)
         volume = float(wire_bytes(op.nbytes))
         if op.op == "write" and not op.same_mr:
             # §3.3: the MR_UPDATE preamble rides the same tree
             volume += wire_bytes(12 * (len(op.members) - 1) + 16)
         return self._mcast(op.members, op.nbytes, volume, op.source, op.key)
+
+    def _stage_dynamic(self, op: GroupOp) -> MsgRecord:
+        """Dynamic-membership lowering: piecewise-membership segments.
+
+        The fluid model has no in-band control plane, so the op's
+        timeline is cut at each ``MemberEvent`` into segments of
+        constant membership.  One hidden solver flow over the INITIAL
+        tree yields the contended baseline rate ``r0``; segment ``k``
+        runs at ``r0 * mincap(T_k) / mincap(T_0)`` (for a scenario-lone
+        flow this is exactly the max-min rate of each segment's tree).
+        A ``fail`` wedges the sender (the dead port freezes the
+        aggregate minimum) but the go-back-N window keeps draining to
+        the live receivers: the fluid image lets ``min(remaining,
+        window)`` wire bytes through at the pre-fail rate, then stalls
+        until the master's isolation at ``+fail_detect`` un-wedges the
+        stream — so a fail near the end of a message (tail fits in the
+        window) correctly costs nothing, and an early fail costs the
+        detection delay, exactly as the packet engine behaves (its
+        window drain and post-isolation go-back-N resend cancel to
+        first order).  Receivers present at completion deliver at
+        completion + path latency (joiners included, matching the
+        packet engine's last-packet delivery); members that left or
+        failed earlier do not deliver."""
+        from repro.core.gleam import DEFAULT_FAIL_DETECT
+        members = list(op.members)
+        source = op.source or members[0]
+        volume = float(wire_bytes(op.nbytes))
+        if op.op == "write" and not op.same_mr:
+            volume += wire_bytes(12 * (len(members) - 1) + 16)
+        sim = self._sim
+        key = op.key
+        fail_detect = float(self.group_kw.get("fail_detect",
+                                              DEFAULT_FAIL_DETECT))
+
+        def mincap(ms) -> float:
+            links = sim.multicast_tree_links(source, ms, key)
+            if not links:                   # no receivers left
+                return cap0
+            return float(min(sim.cap[i] for i in links))
+
+        links0 = sim.multicast_tree_links(source, members, key)
+        cap0 = float(min(sim.cap[i] for i in links0))
+        events = op.sorted_events()
+        # membership timeline -> typed steps: ("cap", at, new_tree_cap)
+        # for join/leave, ("fail", at, cap_after_isolation) for fails
+        present = list(members)
+        steps: List[Tuple[str, float, float]] = []
+        for ev in events:
+            if ev.kind == "join":
+                present.append(ev.member)
+                steps.append(("cap", ev.at, mincap(present)))
+            elif ev.kind == "leave":
+                present.remove(ev.member)
+                steps.append(("cap", ev.at, mincap(present)))
+            elif ev.kind == "fail":
+                present.remove(ev.member)
+                steps.append(("fail", ev.at, mincap(present)))
+            # master-switch: no effect on the in-flight message
+        # go-back-N window in wire bytes: what the sender can still push
+        # past a frozen cumulative ACK before it wedges
+        window_wire = float(self.group_kw.get("window", 256)
+                            * (pk.MTU + pk.HDR))
+        seg = wire_bytes(min(op.nbytes, pk.MTU))
+        latency = {m: self._path_latency(source, m, seg, key)
+                   for m in set(members) | {e.member for e in events}
+                   if m != source}
+        rec = self._new_rec(op.nbytes)
+        hidden = self._new_rec(op.nbytes)
+        self._stage(links0, volume, hidden, {}, 0.0)
+
+        def fin(t0: float) -> float:
+            r0 = volume / (hidden.t_sender_cqe - t0)
+            remaining, t_rel, cap_now = volume, 0.0, cap0
+            for kind, at, cap_next in steps + [("cap", math.inf, cap0)]:
+                rate = r0 * (cap_now / cap0)
+                if at > t_rel:
+                    if remaining <= rate * (at - t_rel):
+                        t_rel += remaining / rate
+                        remaining = 0.0
+                        break
+                    remaining -= rate * (at - t_rel)
+                    t_rel = at
+                if kind == "fail":
+                    # the in-flight window drains to the live receivers
+                    # at the pre-fail rate ...
+                    drain = min(remaining, window_wire)
+                    if drain >= remaining:
+                        t_rel += remaining / rate
+                        remaining = 0.0
+                        break
+                    remaining -= drain
+                    # ... then the sender wedges until isolation
+                    t_rel = max(t_rel + drain / rate, at + fail_detect)
+                cap_now = cap_next
+            done = t0 + t_rel
+            receivers = set(members)
+            for ev in events:               # membership at completion
+                if ev.at > t_rel:
+                    break
+                if ev.kind == "join":
+                    receivers.add(ev.member)
+                elif ev.kind in ("leave", "fail"):
+                    receivers.discard(ev.member)
+            receivers.discard(source)
+            back = 0.0
+            for m in receivers:
+                lat, prop = latency[m]
+                rec.t_deliver[m] = done + lat
+                back = max(back, prop)
+            rec.t_sender_cqe = (max(rec.t_deliver.values()) + back
+                                if receivers else done)
+            return rec.t_sender_cqe
+
+        self._post.append(fin)
+        return rec
 
     def _stage_overlay(self, op: GroupOp, transport: Transport) -> MsgRecord:
         """Relay lowering: one concurrent fluid flow per relay edge (so

@@ -62,6 +62,14 @@ class GroupTable:
     # uninstalling the group can release its share of the switch-wide
     # port-utilization counters (Alg. 4's load-balancing input)
     port_refs: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # --- membership index (control-plane bookkeeping, not Fig. 5 state):
+    # member IP -> the port this switch serves it through, recorded at
+    # envelope-install time so an incremental leave/fail envelope can
+    # release exactly the port the member registered through (a real
+    # deployment re-derives this from the removal envelope's routing;
+    # the simulator keeps the index to stay deterministic under the
+    # port-utilization drift of Algorithm 4's load balancing).
+    member_port: Dict[int, int] = dataclasses.field(default_factory=dict)
     # --- Alg. 3 hot-path caches (simulator-internal, not Fig. 5 state):
     # ``agg_entries_cache`` is the entry list excluding the source-facing
     # port; ``agg_min`` is (min ack_psn over that list, owning port).
@@ -73,14 +81,49 @@ class GroupTable:
 
     def add_connected(self, port: int, dest_ip: int, dest_qpn: int,
                       va: int = 0, rkey: int = 0):
+        # new entries join the cumulative-ACK state "as caught up as the
+        # group": seeding ack_psn from last_ack_psn keeps a mid-stream
+        # install (dynamic join) from wedging the aggregate minimum.  At
+        # registration time last_ack_psn is still the fresh-entry default
+        # (PSN_MOD - 1), so the static path is unchanged.
         self.entries[port] = PortEntry(port, CONNECTED, dest_ip, dest_qpn,
-                                       va, rkey)
+                                       va, rkey,
+                                       ack_psn=self.last_ack_psn)
         self.agg_entries_cache = self.agg_min = None
 
     def add_forwarded(self, port: int):
         if port not in self.entries:
-            self.entries[port] = PortEntry(port, FORWARDED)
+            self.entries[port] = PortEntry(port, FORWARDED,
+                                           ack_psn=self.last_ack_psn)
             self.agg_entries_cache = self.agg_min = None
+
+    def remove_port(self, port: int) -> Optional[PortEntry]:
+        """Incremental teardown of one tree port (§3.4 maintenance).
+
+        Drops the port's entry AND its per-port group state (the CNP
+        counter), so ``table_bytes`` shrinks by exactly the install
+        cost.  Invalidate both aggregation caches: the removed port may
+        have owned the pending minimum, and the switch re-runs Alg. 3
+        right after to un-wedge (emit the newly-satisfied aggregate)."""
+        e = self.entries.pop(port, None)
+        if e is not None:
+            self.cnp_count.pop(port, None)
+            self.agg_entries_cache = self.agg_min = None
+        return e
+
+    def retarget(self, port: int, dest_ip: int, dest_qpn: int,
+                 va: int = 0, rkey: int = 0) -> PortEntry:
+        """Swap the receiver behind a ``connected`` port in place
+        (member migration / replacement): new L3/L4 + MR rewrite
+        state, per-port cumulative ACK state reset to the aggregate so
+        the newcomer is not charged with the departed receiver's lag."""
+        e = self.entries[port]
+        if e.type != CONNECTED:
+            raise ValueError(f"port {port} is not a connected entry")
+        e.dest_ip, e.dest_qpn, e.va, e.rkey = dest_ip, dest_qpn, va, rkey
+        e.ack_psn = self.last_ack_psn
+        self.agg_entries_cache = self.agg_min = None
+        return e
 
     # ------------------------------------------------------------ queries
 

@@ -12,8 +12,21 @@
     precedes each request so leaf switches rewrite va/rkey (§3.3);
     ``same_mr=True`` enables the Appendix-C optimization (all receivers
     share VA/R_key: no MR_UPDATE traffic, models the modified-RNIC mode);
-  * ``switch_source(m)``  — Appendix-B source rotation with sqPSN/rqPSN
-    synchronization and NO re-registration;
+  * the **membership control plane** (§3.4 one-to-many connection
+    maintenance) — a ``MulticastGroup`` is a state machine
+    (``idle -> registering -> active <-> updating -> closed``) whose
+    transitions are in-band control traffic on the live fabric:
+    ``join(m)`` installs the new member's ports with an incremental
+    MFT-update envelope and re-arms its QP onto the live PSN stream
+    (no reset); ``leave(m)`` walks a teardown envelope down the tree,
+    releasing ports and un-wedging aggregation; ``fail(m)`` models a
+    silent receiver crash — the master isolates the dead port after
+    ``fail_detect`` with the same teardown envelope so the pending
+    aggregate drains and the sender resumes; ``master_switch(m)`` folds
+    the Appendix-B source rotation (sqPSN/rqPSN synchronization, NO
+    re-registration) into a master handover; ``close()`` deregisters.
+    Every operation lands a ``MembershipRecord`` in ``events_log``
+    (request time, completion time — fail records measure recovery).
 - ``unicast_qp(a, b)``    — plain RC connections for the baselines.
 
 Completion bookkeeping: every submitted group message records the sender
@@ -23,6 +36,7 @@ JCT, IOPS and IO latency exactly as §5 defines them.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence
 
@@ -32,59 +46,161 @@ from repro.core.fattree import Topology
 from repro.core.metrics import MsgRecord
 from repro.core.packetsim import Host, PacketSim
 
-__all__ = ["GleamNetwork", "MulticastGroup", "MsgRecord", "VIRTUAL_QPN"]
+__all__ = ["GleamNetwork", "MulticastGroup", "MembershipRecord",
+           "MsgRecord", "VIRTUAL_QPN", "DEFAULT_FAIL_DETECT",
+           "IDLE", "REGISTERING", "ACTIVE", "UPDATING", "CLOSED"]
 
 VIRTUAL_QPN = 0x1
 GROUP_IP_BASE = 1 << 20          # far above any host IP
 ENVELOPE_MAX_NODES = 183         # MTU-limited (Appendix A, Fig. 17)
+
+# group lifecycle states (docs/ARCHITECTURE.md has the diagram)
+IDLE = "idle"                    # constructed, tables not installed
+REGISTERING = "registering"      # Appendix-A envelopes in flight
+ACTIVE = "active"                # steady state, data plane live
+UPDATING = "updating"            # >= 1 membership operation in flight
+CLOSED = "closed"                # deregistered, QPs quiesced
+
+# How long the master takes to notice a silently-failed receiver before
+# isolating its port (keepalive-timeout scale, >> RTO so the sender has
+# visibly wedged by the time isolation un-wedges it).
+DEFAULT_FAIL_DETECT = 1e-3
+
+
+@dataclasses.dataclass
+class MembershipRecord:
+    """One control-plane operation's bookkeeping.  For ``fail`` records
+    ``latency`` is the recovery time: crash -> detection (+
+    ``fail_detect``) -> in-band isolation -> fabric confirmation."""
+
+    kind: str                    # join | leave | fail | master-switch
+    member: str
+    t_request: float
+    t_done: float = -1.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_request
+
+    @property
+    def complete(self) -> bool:
+        return self.t_done >= 0.0
 
 
 class MulticastGroup:
     def __init__(self, net: "GleamNetwork", members: Sequence[str],
                  group_ip: int, *, master: Optional[str] = None,
                  mtu: int = pk.MTU, window: int = 256,
-                 ack_freq: int = 4, rto: float = 200e-6):
+                 ack_freq: int = 4, rto: float = 200e-6,
+                 fail_detect: float = DEFAULT_FAIL_DETECT):
         self.net = net
         self.members = list(members)
         self.group_ip = group_ip
         self.master = master or self.members[0]
         self.source = self.master
+        self.mtu = mtu
+        self.window = window
+        self.ack_freq = ack_freq
+        self.rto = rto
+        self.fail_detect = fail_detect
         self.qps: Dict[str, QP] = {}
         self.records: Dict[int, MsgRecord] = {}
         self._next_msg = 0
         self.registered = False
         self.register_time = -1.0
-        sim = net.sim
+        self.state = IDLE
+        self.events_log: List[MembershipRecord] = []
+        self._op_seq = 0
+        self._inflight: Dict[int, MembershipRecord] = {}
+        # member -> (op_seq, node record) of a fail whose isolation
+        # envelope has not been sent yet (detection pending)
+        self._pending_isolation: Dict[str, tuple] = {}
+        self._n_expected = 0
         for m in self.members:
-            h = sim.hosts[m]
-            qpn = net.alloc_qpn(m)
-            qp = QP(qpn, h.ip, group_ip, VIRTUAL_QPN,
-                    link_bw=net.host_bw(m), mtu=mtu, window=window,
-                    ack_freq=ack_freq, rto=rto)
-            va = 0x1000_0000 + qpn * 0x10000
-            rkey = 0x100 + qpn
-            qp.register_mr(rkey, va, 1 << 30)
-            qp.on_complete = self._mk_on_complete()
-            qp.on_deliver = self._mk_on_deliver(m)
-            self.qps[m] = h.add_qp(qp)
+            self._make_member_qp(m)
         self._acked: set = set()
 
     # ------------------------------------------------------------ control
 
+    def _make_member_qp(self, m: str) -> QP:
+        h = self.net.sim.hosts[m]
+        qpn = self.net.alloc_qpn(m)
+        qp = QP(qpn, h.ip, self.group_ip, VIRTUAL_QPN,
+                link_bw=self.net.host_bw(m), mtu=self.mtu,
+                window=self.window, ack_freq=self.ack_freq, rto=self.rto)
+        va = 0x1000_0000 + qpn * 0x10000
+        rkey = 0x100 + qpn
+        qp.register_mr(rkey, va, 1 << 30)
+        qp.on_complete = self._mk_on_complete()
+        qp.on_deliver = self._mk_on_deliver(m)
+        self.qps[m] = h.add_qp(qp)
+        return qp
+
+    def _node_record(self, m: str) -> dict:
+        qp = self.qps[m]
+        rkey = next(iter(qp.mrs.keys()))
+        return {"ip": qp.ip, "qpn": qp.qpn,
+                "va": qp.mrs[rkey][0], "rkey": rkey}
+
     def _records_payload(self) -> List[dict]:
-        out = []
-        for m in self.members:
-            qp = self.qps[m]
-            va, _ = next(iter(qp.mrs.values()))[0], None
-            rkey = next(iter(qp.mrs.keys()))
-            out.append({"ip": qp.ip, "qpn": qp.qpn,
-                        "va": qp.mrs[rkey][0], "rkey": rkey})
-        return out
+        return [self._node_record(m) for m in self.members]
+
+    # ----- host-side handlers (installed per host by GleamNetwork and
+    # dispatched here by group ip, so many groups can churn at once)
+
+    def _member_envelope(self, host: Host, p: pk.Packet, now: float) -> None:
+        info = p.payload
+        if not any(n["ip"] == host.ip for n in info["nodes"]):
+            return
+        sim = self.net.sim
+        mft_op = info.get("mft_op", "install")
+        if mft_op == "install":
+            # membership affirmation (② in Fig. 4); joins carry an
+            # op_seq so the master can retire the specific operation
+            if host.ip != info["master_ip"]:
+                seq = info.get("op_seq")
+                payload = (self.group_ip if seq is None else
+                           {"group_ip": self.group_ip, "op_seq": seq,
+                            "member_ip": host.ip})
+                ack = pk.Packet(pk.ENVELOPE_ACK, host.ip,
+                                info["master_ip"], payload=payload)
+                sim.send_control(host, ack, now)
+            return
+        # leave/fail teardown reached the member: a graceful leaver
+        # quiesces its QP; either way the arrival confirms the tree is
+        # pruned up to the leaf, so acknowledge to the master (for a
+        # failed member this is the NIC-level confirmation standing in
+        # for the fabric's — the RC QP above it is already dead)
+        qp = self.qps.get(host.name)
+        if qp is not None and mft_op == "leave":
+            qp.deactivate()
+        ack = pk.Packet(pk.ENVELOPE_ACK, host.ip, info["master_ip"],
+                        payload={"group_ip": self.group_ip,
+                                 "op_seq": info.get("op_seq"),
+                                 "member_ip": host.ip})
+        sim.send_control(host, ack, now)
+
+    def _master_env_ack(self, host: Host, p: pk.Packet, now: float) -> None:
+        pl = p.payload
+        if isinstance(pl, dict):                     # membership op ack
+            rec = self._inflight.pop(pl.get("op_seq"), None)
+            if rec is not None:
+                rec.t_done = now
+                if not self._inflight and self.state == UPDATING:
+                    self.state = ACTIVE
+            return
+        if pl == self.group_ip and not self.registered:  # registration
+            self._acked.add(p.src_ip)
+            if len(self._acked) >= self._n_expected:
+                self.registered = True
+                self.register_time = now
+                self.state = ACTIVE
 
     def register(self, *, run: bool = True) -> float:
         """Appendix-A centralized registration; returns completion time."""
         sim = self.net.sim
         master_host = sim.hosts[self.master]
+        self.state = REGISTERING
         nodes = self._records_payload()
         n_pkts = max(1, math.ceil(len(nodes) / ENVELOPE_MAX_NODES))
         for i in range(n_pkts):
@@ -96,29 +212,10 @@ class MulticastGroup:
                                      "nodes": chunk, "seq": i,
                                      "total": n_pkts})
             sim.send_control(master_host, env, sim.now)
-        # membership affirmation (② in Fig. 4)
-        expected = {m for m in self.members if m != self.master}
-
-        def on_env(host: Host):
-            def fn(p: pk.Packet, now: float):
-                my = any(n["ip"] == host.ip for n in p.payload["nodes"])
-                if my and host.ip != p.payload["master_ip"]:
-                    ack = pk.Packet(pk.ENVELOPE_ACK, host.ip,
-                                    p.payload["master_ip"],
-                                    payload=self.group_ip)
-                    sim.send_control(host, ack, now)
-            return fn
-
-        def on_env_ack(p: pk.Packet, now: float):
-            if p.payload == self.group_ip:
-                self._acked.add(p.src_ip)
-                if len(self._acked) >= len(expected):
-                    self.registered = True
-                    self.register_time = now
-
+        self._n_expected = len({m for m in self.members
+                                if m != self.master})
         for m in self.members:
-            sim.hosts[m].on_envelope = on_env(sim.hosts[m])
-        master_host.on_envelope_ack = on_env_ack
+            self.net.attach_host_handlers(m)
         if run:
             sim.run(until=sim.now + 1.0)
             assert self.registered, "registration did not complete"
@@ -144,6 +241,8 @@ class MulticastGroup:
         return len(self.members) - 1
 
     def bcast(self, nbytes: int, *, now: Optional[float] = None) -> MsgRecord:
+        if self.state == CLOSED:
+            raise RuntimeError("bcast on a closed group")
         sim = self.net.sim
         t = sim.now if now is None else now
         qp = self.qps[self.source]
@@ -159,6 +258,8 @@ class MulticastGroup:
         """One-to-many WRITE.  Without Appendix C (same_mr=False) every
         request is preceded by an MR_UPDATE message carrying per-receiver
         (va, rkey) for the leaf switches to install (§3.3)."""
+        if self.state == CLOSED:
+            raise RuntimeError("write on a closed group")
         sim = self.net.sim
         t = sim.now if now is None else now
         qp = self.qps[self.source]
@@ -192,6 +293,165 @@ class MulticastGroup:
         new.sync_psn_for_source_switch(becoming_source=True)
         self.source = new_source
 
+    # ----------------------------------------- membership control plane
+
+    def _require_live(self, what: str) -> None:
+        if self.state not in (ACTIVE, UPDATING):
+            raise RuntimeError(
+                f"{what} requires an active group, state is {self.state!r}")
+
+    def _begin_op(self, kind: str, member: str, t: float
+                  ) -> tuple[int, MembershipRecord]:
+        self._op_seq += 1
+        rec = MembershipRecord(kind, member, t)
+        self._inflight[self._op_seq] = rec
+        self.events_log.append(rec)
+        self.state = UPDATING
+        return self._op_seq, rec
+
+    def _send_update_envelope(self, nodes: List[dict], mft_op: str,
+                              op_seq: int, t: float) -> None:
+        """One incremental MFT-update envelope from the master into the
+        live fabric (same wire format as registration + the op tag)."""
+        sim = self.net.sim
+        master_host = sim.hosts[self.master]
+        env = pk.Packet(pk.ENVELOPE, master_host.ip, self.group_ip,
+                        size=pk.HDR + 8 + 11 * len(nodes),
+                        payload={"group_ip": self.group_ip,
+                                 "master_ip": master_host.ip,
+                                 "nodes": nodes, "seq": 0, "total": 1,
+                                 "mft_op": mft_op, "op_seq": op_seq})
+        sim.send_control(master_host, env, t)
+
+    def _run_until_op(self, rec: MembershipRecord,
+                      timeout: float = 1.0) -> None:
+        sim = self.net.sim
+        deadline = sim.now + timeout
+        while not rec.complete:
+            before = sim.events
+            sim.run(until=deadline)
+            if sim.events == before or sim.now >= deadline:
+                break
+        assert rec.complete, \
+            f"membership op {rec.kind}({rec.member}) did not complete"
+
+    def join(self, member: str, *, now: Optional[float] = None,
+             run: bool = False) -> MembershipRecord:
+        """Add ``member`` to the live group: allocate its QP, re-arm the
+        receive side onto the live PSN stream (no reset), and install
+        its tree ports with an incremental MFT-update envelope.  The
+        joiner receives data from the moment its leaf port is installed;
+        new entries seed their cumulative ACK state from the group's
+        aggregate, so the join never wedges Algorithm 3."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._require_live("join")
+        if member in self.members:
+            raise ValueError(f"{member!r} is already a member")
+        pending = self._pending_isolation.pop(member, None)
+        if pending is not None:
+            # the member rejoins before its failure was even detected:
+            # the rejoin IS the detection.  Send the teardown envelope
+            # now, immediately ahead of the install (FIFO on the same
+            # control path), so the dead port's entry and ref are
+            # released before the fresh ones land — the stale timer
+            # fires into a no-op.
+            self._send_update_envelope([pending[1]], "fail", pending[0], t)
+        qp = self._make_member_qp(member)
+        qp.rearm_receiver()
+        self.members.append(member)
+        self.net.attach_host_handlers(member)
+        seq, rec = self._begin_op("join", member, t)
+        self._send_update_envelope([self._node_record(member)],
+                                   "install", seq, t)
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def _check_removable(self, kind: str, member: str) -> None:
+        self._require_live(kind)
+        if member not in self.members:
+            raise ValueError(f"{member!r} is not a member")
+        if member == self.source:
+            raise ValueError(
+                f"cannot {kind} the current source {member!r}; "
+                f"master_switch first")
+
+    def leave(self, member: str, *, now: Optional[float] = None,
+              run: bool = False) -> MembershipRecord:
+        """Graceful departure: a teardown envelope walks the member's
+        tree path releasing ports; the member quiesces its QP when the
+        envelope reaches it and confirms to the master."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._check_removable("leave", member)
+        self.members.remove(member)
+        seq, rec = self._begin_op("leave", member, t)
+        self._send_update_envelope([self._node_record(member)],
+                                   "leave", seq, t)
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def fail(self, member: str, *, now: Optional[float] = None,
+             run: bool = False) -> MembershipRecord:
+        """Silent receiver crash at ``now``: the QP dies immediately (it
+        stops ACKing, so the aggregate minimum freezes and the sender
+        wedges once its window drains), and after ``fail_detect`` the
+        master isolates the dead port with the same teardown envelope —
+        pruned switches recompute the pending aggregate and drain the
+        outstanding feedback, un-wedging the stream.  The record's
+        ``latency`` is the §3.4 recovery time."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._check_removable("fail", member)
+        self.qps[member].deactivate()
+        self.members.remove(member)
+        seq, rec = self._begin_op("fail", member, t)
+        node = self._node_record(member)
+        self._pending_isolation[member] = (seq, node)
+
+        def isolate(tt: float) -> None:
+            # superseded if the member rejoined first (join sends this
+            # exact envelope itself, ahead of the re-install)
+            if self._pending_isolation.get(member, (None,))[0] == seq:
+                del self._pending_isolation[member]
+                self._send_update_envelope([node], "fail", seq, tt)
+
+        sim.schedule(t + self.fail_detect, isolate)
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def master_switch(self, member: str, *, now: Optional[float] = None
+                      ) -> MembershipRecord:
+        """Master handover + Appendix-B source rotation: the new master
+        takes the source role (sqPSN/rqPSN synchronized, NO
+        re-registration — ``ack_out_port`` re-learns from its first
+        data packet) and future control-plane envelopes originate from
+        it."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._require_live("master-switch")
+        if member not in self.members:
+            raise ValueError(f"{member!r} is not a member")
+        self.switch_source(member)
+        self.master = member
+        rec = MembershipRecord("master-switch", member, t, t_done=t)
+        self.events_log.append(rec)
+        return rec
+
+    def close(self) -> None:
+        """Deregister the group: uninstall every switch table (their
+        memory and port-utilization load are released through the
+        store's ``on_remove`` hook) and quiesce the member QPs."""
+        for sw in self.net.sim.switches.values():
+            sw.tables.remove(self.group_ip)
+        for qp in self.qps.values():
+            qp.deactivate()
+        self.net.groups_by_ip.pop(self.group_ip, None)
+        self.state = CLOSED
+
     # ------------------------------------------------------------- stats
 
     def run_until_delivered(self, rec: MsgRecord,
@@ -213,6 +473,11 @@ class GleamNetwork:
         self.sim = PacketSim(topo, **sim_kw)
         self._qpn: Dict[str, int] = {}
         self._groups = 0
+        # group-ip -> MulticastGroup: the demux the per-host envelope
+        # handlers dispatch through, so several groups can register and
+        # churn on the same hosts concurrently
+        self.groups_by_ip: Dict[int, MulticastGroup] = {}
+        self._handled_hosts: set = set()
 
     def alloc_qpn(self, host: str) -> int:
         n = self._qpn.get(host, 16) + 1
@@ -222,11 +487,36 @@ class GleamNetwork:
     def host_bw(self, host: str) -> float:
         return self.topo.link(host, 0).bw
 
+    def attach_host_handlers(self, member: str) -> None:
+        """Install the (idempotent) control-plane dispatchers on a
+        member host: envelopes and envelope-ACKs route to the owning
+        group by the group ip they carry."""
+        if member in self._handled_hosts:
+            return
+        self._handled_hosts.add(member)
+        host = self.sim.hosts[member]
+
+        def on_envelope(p: pk.Packet, now: float) -> None:
+            g = self.groups_by_ip.get(p.payload.get("group_ip"))
+            if g is not None:
+                g._member_envelope(host, p, now)
+
+        def on_envelope_ack(p: pk.Packet, now: float) -> None:
+            pl = p.payload
+            gid = pl.get("group_ip") if isinstance(pl, dict) else pl
+            g = self.groups_by_ip.get(gid)
+            if g is not None:
+                g._master_env_ack(host, p, now)
+
+        host.on_envelope = on_envelope
+        host.on_envelope_ack = on_envelope_ack
+
     def multicast_group(self, members: Sequence[str],
                         **kw) -> MulticastGroup:
         g = MulticastGroup(self, members,
                            GROUP_IP_BASE + self._groups, **kw)
         self._groups += 1
+        self.groups_by_ip[g.group_ip] = g
         return g
 
     def unicast_qp(self, a: str, b: str, *, mtu: int = pk.MTU,

@@ -100,6 +100,7 @@ class Host:
         self.qps: Dict[int, QP] = {}
         self.ctrl: deque = deque()          # feedback/control, priority
         self.no_qp_drops = 0
+        self.dead_drops = 0                 # traffic to deactivated QPs
         self.on_envelope: Optional[Callable] = None
         self.on_envelope_ack: Optional[Callable] = None
         self._qp_rr = 0
@@ -142,6 +143,9 @@ class Host:
             if qp is None:
                 self.no_qp_drops += 1       # Fig. 3: no matching QP
                 return
+            if not qp.alive:
+                self.dead_drops += 1        # failed member: silent sink
+                return
             fb = qp.on_data(p, now)
             if fb:
                 self.ctrl.extend(fb)
@@ -151,6 +155,9 @@ class Host:
             qp = self.qps.get(p.dst_qpn)
             if qp is None:
                 self.no_qp_drops += 1
+                return
+            if not qp.alive:
+                self.dead_drops += 1
                 return
             if kind == _ACK:
                 qp.on_ack(p.psn, now)

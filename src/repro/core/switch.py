@@ -113,6 +113,18 @@ class GleamSwitch:
         self.port_util[port] = self.port_util.get(port, 0) + 1
         t.port_refs[port] = t.port_refs.get(port, 0) + 1
 
+    def _release_port_ref(self, t: GroupTable, port: int) -> int:
+        """Give ONE member's registration load on ``port`` back;
+        returns the remaining per-group refcount (0 = last member
+        behind this port is gone and the tree edge can be pruned)."""
+        self.port_util[port] = max(self.port_util.get(port, 0) - 1, 0)
+        n = t.port_refs.get(port, 0) - 1
+        if n > 0:
+            t.port_refs[port] = n
+            return n
+        t.port_refs.pop(port, None)
+        return 0
+
     # --------------------------------------------------------- data plane
 
     def _unicast(self, p: pk.Packet) -> List[Emit]:
@@ -296,9 +308,15 @@ class GleamSwitch:
     # ------------------------------------------------- control plane (A)
 
     def _envelope(self, p: pk.Packet, in_port: int, now: float) -> List[Emit]:
-        """Algorithm 4: build the local table, emit per-port sub-envelopes."""
+        """Algorithm 4 (install) or the §3.4 incremental teardown path,
+        selected by the envelope's ``mft_op`` (absent = install, which
+        keeps registration envelopes bit-identical).  Install is already
+        incremental — a join envelope lands on the existing table and
+        only adds the ports its nodes need."""
         self.stats.envelopes += 1
         info = p.payload
+        if info.get("mft_op") in ("leave", "fail"):
+            return self._envelope_remove(p, in_port, now)
         g = info["group_ip"]
         t = self.tables.get(g) or self.tables.create(g)
         # Make the tree traversable from ANY member (Appendix B: the master
@@ -325,6 +343,7 @@ class GleamSwitch:
                 t.add_connected(direct, ip, node["qpn"],
                                 node.get("va", 0), node.get("rkey", 0))
                 self._count_port_ref(t, direct)
+                t.member_port[ip] = direct
                 down.setdefault(direct, []).append(node)
                 continue
             cands = self.topo.candidate_ports(self.name, host)
@@ -339,6 +358,7 @@ class GleamSwitch:
                 out = min(cands, key=lambda c: (self.port_util.get(c, 0), c))
             t.add_forwarded(out)
             self._count_port_ref(t, out)
+            t.member_port[ip] = out
             down.setdefault(out, []).append(node)
         emits: List[Emit] = []
         for port, nodes in down.items():
@@ -346,4 +366,64 @@ class GleamSwitch:
             q.payload = {**info, "nodes": nodes}
             q.size = pk.HDR + 8 + 11 * len(nodes)   # Fig. 17 layout scale
             emits.append((port, q))
+        return emits
+
+    def _envelope_remove(self, p: pk.Packet, in_port: int,
+                         now: float) -> List[Emit]:
+        """Incremental MFT teardown (§3.4 maintenance): release each
+        departing member's share of its tree port, prune forwarded
+        ports whose last member is gone, uninstall the whole table when
+        no member registers through this switch anymore — and un-wedge
+        aggregation, because the removed receiver may have been the
+        straggler holding the pending minimum (its outstanding PSN
+        window is drained by re-running Algorithm 3 without it)."""
+        info = p.payload
+        g = info["group_ip"]
+        t = self.tables.get(g)
+        emits: List[Emit] = []
+        if t is None:
+            return emits
+        down: Dict[int, list] = {}
+        for node in info["nodes"]:
+            ip = node["ip"]
+            port = t.member_port.pop(ip, None)
+            if port is None:
+                # the member did not register THROUGH this switch (the
+                # removal originates at a post-handover master whose
+                # path differs from the install path): hold no local
+                # ref to release, just relay the teardown along a tree
+                # edge toward the member — the switches that did index
+                # it (exactly the ones that counted refs) prune there
+                host = self.ip_host.get(ip)
+                if host is None:
+                    continue
+                cands = [c for c in self.topo.candidate_ports(self.name,
+                                                              host)
+                         if c != in_port and c in t.entries]
+                if cands:
+                    down.setdefault(cands[0], []).append(node)
+                continue
+            e = t.entries.get(port)
+            refs_left = self._release_port_ref(t, port)
+            # the sub-envelope continues toward the member: downstream
+            # switches release their share, and the member host itself
+            # learns it is out (a graceful leaver quiesces its QP and
+            # confirms to the master from there)
+            down.setdefault(port, []).append(node)
+            if e is not None and (
+                    (e.type == CONNECTED and e.dest_ip == ip)
+                    or (e.type == FORWARDED and refs_left == 0)):
+                t.remove_port(port)
+        for port, nodes in down.items():
+            q = p.copy()
+            q.payload = {**info, "nodes": nodes}
+            q.size = pk.HDR + 8 + 11 * len(nodes)
+            emits.append((port, q))
+        if not t.port_refs:
+            # last member behind this switch is gone: uninstall the
+            # table (memory + residual port load released via on_remove)
+            self.tables.remove(g)
+            return emits
+        if t.ack_out_port is not None and self._agg_entries(t):
+            emits.extend(self._generate(t, now))
         return emits

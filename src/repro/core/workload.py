@@ -11,6 +11,14 @@ instead of a parallel class hierarchy:
   write / unicast / allreduce), ``members``, ``nbytes``, and a
   ``transport`` naming how the bytes move (``gleam`` | ``multiunicast``
   | ``ring`` | ``binary-tree``).
+- ``MemberEvent`` — a timed membership change riding a ``GroupOp``:
+  ``kind`` (``join`` | ``leave`` | ``fail`` | ``master-switch``),
+  ``member``, and ``at`` (seconds after the op's submission).  A
+  ``GroupOp`` with a non-empty ``events`` tuple is a *dynamic* op: the
+  engines lower the events onto their membership control plane (the
+  packet engine schedules in-band MFT-update envelopes; the flow
+  engine integrates piecewise-membership segments — see
+  ``core/engine.py`` and ``docs/ARCHITECTURE.md``).
 - ``Workload``  — an ordered batch of ``GroupOp``s that runs as ONE
   independent scenario (no bandwidth sharing with other workloads).
 - the **transport registry** — ``Transport`` descriptors looked up by
@@ -42,12 +50,15 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
-    "OP_CHOICES", "TRANSPORT_CHOICES", "RELAY_OVERHEAD",
-    "GroupOp", "Workload", "Transport",
+    "OP_CHOICES", "TRANSPORT_CHOICES", "EVENT_CHOICES", "RELAY_OVERHEAD",
+    "GroupOp", "MemberEvent", "Workload", "Transport",
     "register_transport", "get_transport", "transport_names",
 ]
 
 OP_CHOICES = ("bcast", "write", "unicast", "allreduce")
+
+# Timed membership events a dynamic GroupOp may carry (§3.4 maintenance).
+EVENT_CHOICES = ("join", "leave", "fail", "master-switch")
 
 # The four §5 transport strategies.  The registry may hold more
 # (register_transport), but these are what --transport advertises.
@@ -141,6 +152,46 @@ def get_transport(name: str) -> Transport:
 # ==================================================================== IR
 
 @dataclasses.dataclass(frozen=True)
+class MemberEvent:
+    """One timed membership change on a dynamic GroupOp.
+
+    ``at`` is seconds after the op's submission.  ``join`` adds a host
+    that is not yet a member (it locks onto the live PSN stream and is
+    not required to deliver the in-flight message); ``leave`` is the
+    graceful departure of a receiver; ``fail`` is a silent receiver
+    crash (isolated by the master after its failure-detection delay);
+    ``master-switch`` hands the master+source roles to another member
+    (Appendix B, no re-registration).
+    """
+
+    kind: str
+    member: str
+    at: float
+
+    def __post_init__(self):
+        if self.kind not in EVENT_CHOICES:
+            raise ValueError(
+                f"unknown event kind {self.kind!r}; choose from "
+                f"{EVENT_CHOICES}")
+        if not self.member:
+            raise ValueError("event member must be a host name")
+        if self.at < 0:
+            raise ValueError(f"event time must be >= 0, got {self.at}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MemberEvent":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown MemberEvent fields: {sorted(unknown)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class GroupOp:
     """One declarative group operation.
 
@@ -150,7 +201,10 @@ class GroupOp:
     TRANSPORT_CHOICES); ``chunks`` is the pipeline depth of the
     chunked overlay transports (ring / binary-tree) and ignored
     elsewhere; ``same_mr`` is the Appendix-C WRITE optimization
-    (gleam only); ``key`` seeds ECMP spreading.
+    (gleam only); ``key`` seeds ECMP spreading; ``events`` is the
+    timed membership-change list making the op *dynamic* (native
+    gleam bcast/write only — the overlay relays have no in-fabric
+    membership to update).
     """
 
     op: str
@@ -161,11 +215,15 @@ class GroupOp:
     same_mr: bool = False
     key: int = 0
     chunks: int = 8
+    events: Tuple[MemberEvent, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "members", tuple(self.members))
         object.__setattr__(self, "transport",
                            canonical_transport(self.transport))
+        object.__setattr__(self, "events", tuple(
+            e if isinstance(e, MemberEvent) else MemberEvent.from_dict(e)
+            for e in self.events))
         if self.op not in OP_CHOICES:
             raise ValueError(
                 f"unknown op {self.op!r}; choose from {OP_CHOICES}")
@@ -182,6 +240,42 @@ class GroupOp:
                              f"got {len(self.members)}")
         if self.source is not None and self.source not in self.members:
             raise ValueError(f"source {self.source!r} not in members")
+        if self.events:
+            self._check_events()
+
+    def _check_events(self) -> None:
+        """Replay the membership timeline so invalid sequences fail at
+        construction, not mid-simulation."""
+        if self.op not in ("bcast", "write"):
+            raise ValueError(
+                f"membership events require a bcast/write op, not {self.op}")
+        if not get_transport(self.transport).native:
+            raise ValueError(
+                "membership events require a native (gleam) transport; "
+                f"{self.transport!r} is an overlay relay")
+        present = set(self.members)
+        source = self.source or self.members[0]
+        for e in sorted(self.events, key=lambda e: e.at):
+            if e.kind == "join":
+                if e.member in present:
+                    raise ValueError(
+                        f"join: {e.member!r} is already a member at t={e.at}")
+                present.add(e.member)
+            elif e.kind in ("leave", "fail"):
+                if e.member not in present:
+                    raise ValueError(
+                        f"{e.kind}: {e.member!r} is not a member at t={e.at}")
+                if e.member == source:
+                    raise ValueError(
+                        f"{e.kind}: {e.member!r} is the current source "
+                        f"(switch the master first)")
+                present.remove(e.member)
+            else:                           # master-switch
+                if e.member not in present:
+                    raise ValueError(
+                        f"master-switch: {e.member!r} is not a member "
+                        f"at t={e.at}")
+                source = e.member
 
     def ordered_members(self) -> List[str]:
         """Members with the effective source rotated to the front —
@@ -192,6 +286,20 @@ class GroupOp:
             members.remove(src)
             members.insert(0, src)
         return members
+
+    def sorted_events(self) -> List[MemberEvent]:
+        """Events in time order (stable for equal ``at``)."""
+        return sorted(self.events, key=lambda e: e.at)
+
+    def surviving_receivers(self) -> List[str]:
+        """Initial receivers that are still members when every event has
+        fired — the set a dynamic op must deliver to (joiners receive
+        from their join point and are not required to complete the
+        in-flight message)."""
+        src = self.source or self.members[0]
+        gone = {e.member for e in self.events
+                if e.kind in ("leave", "fail")}
+        return [m for m in self.members if m != src and m not in gone]
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -1,0 +1,65 @@
+"""Shared driver for the agg-min-under-churn invariant, used by BOTH
+the hypothesis property test (``test_protocol_properties``, CI) and the
+deterministic seeded fuzz in ``test_membership`` (runs everywhere —
+hypothesis is an optional dependency)."""
+from __future__ import annotations
+
+from repro.core import fattree, packet as pk
+from repro.core.switch import GleamSwitch
+
+
+def run_churn_case(base: int, events) -> None:
+    """Replay (kind, port, delta) events against one GroupTable and
+    assert, after every step, that the cached ``agg_min`` equals the
+    brute-force windowed ``psn_min`` fold over the live ports and that
+    the emitted aggregated-ACK stream advances in wrapped order.
+
+    ``base`` positions the PSN stream (choose near PSN_MOD to cross the
+    wrap); ``kind`` is ``ack`` (delta above base), ``add`` (install the
+    port mid-window, seeded from ``last_ack_psn``), or ``remove``
+    (incremental teardown + the switch's Alg. 3 un-wedge)."""
+    topo = fattree.testbed(n_hosts=8)
+    sw = GleamSwitch("SW0", topo, fattree.host_ip_map(topo))
+    t = sw.tables.create(group_ip=4242)
+    # mid-stream state just below the wrap point
+    t.last_ack_psn = pk.psn_sub(base, 1)
+    t.add_connected(0, dest_ip=1, dest_qpn=16)      # source-facing port
+    t.ack_out_port = 0
+    for port in (1, 2, 3):
+        t.add_connected(port, dest_ip=port + 1, dest_qpn=16 + port)
+    mirror = {p: t.entries[p].ack_psn for p in (1, 2, 3)}
+    last_emitted = None
+    for kind, port, delta in events:
+        emitted = []
+        if kind == "ack":
+            if port not in mirror:
+                continue
+            psn = pk.psn_add(base, delta)
+            out = sw.on_packet(pk.ack_packet(port + 1, 4242, psn),
+                               port, 0.0)
+            mirror[port] = pk.psn_max(mirror[port], psn)
+            emitted = [q.psn for _, q in out if q.kind == pk.ACK]
+        elif kind == "add":
+            if port in mirror:
+                continue
+            t.add_connected(port, dest_ip=port + 1, dest_qpn=16 + port)
+            mirror[port] = t.entries[port].ack_psn
+        else:                                       # remove
+            if port not in mirror or len(mirror) == 1:
+                continue
+            t.remove_port(port)
+            del mirror[port]
+            # the switch un-wedges after a removal (§3.4): re-run Alg. 3
+            emitted = [q.psn for _, q in sw._generate(t, 0.0)
+                       if q.kind == pk.ACK]
+        brute = None
+        for v in mirror.values():
+            brute = v if brute is None else pk.psn_min(brute, v)
+        if t.agg_min is not None:
+            assert t.agg_min[0] == brute, \
+                f"cached agg_min {t.agg_min[0]} != brute {brute}"
+        for psn in emitted:
+            assert psn == brute
+            if last_emitted is not None:
+                assert pk.psn_gt(psn, last_emitted)
+            last_emitted = psn

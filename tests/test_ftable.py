@@ -95,6 +95,74 @@ class TestStore:
         assert len(ft.tables) == 64
 
 
+# ============================================= churn: incremental teardown
+
+class TestChurnMemory:
+    def test_remove_port_shrinks_table_bytes(self):
+        t = GroupTable(group_ip=7)
+        t.add_connected(0, 1, 16)
+        t.add_forwarded(1)
+        full = t.table_bytes()
+        assert t.remove_port(1) is not None
+        assert t.table_bytes() == full - (ENTRY_BYTES[FORWARDED] + 4)
+        t.remove_port(0)
+        assert t.table_bytes() == full - (ENTRY_BYTES[FORWARDED] + 4) \
+            - (ENTRY_BYTES[CONNECTED] + 4)
+        assert t.remove_port(0) is None             # idempotent
+
+    def test_remove_port_drops_per_port_state_and_caches(self):
+        t = GroupTable(group_ip=7)
+        for p in range(3):
+            t.add_connected(p, p + 1, 16 + p)
+        t.ack_out_port = 0
+        t.cnp_count[2] = 5.0
+        t.agg_min = (0, 2)
+        t.agg_entries_cache = list(t.entries.values())
+        t.remove_port(2)
+        assert 2 not in t.cnp_count
+        assert t.agg_min is None and t.agg_entries_cache is None
+
+    def test_retarget_swaps_receiver_in_place(self):
+        t = GroupTable(group_ip=7)
+        t.add_connected(3, dest_ip=42, dest_qpn=17, va=0x1000, rkey=0x9)
+        t.last_ack_psn = 99
+        e = t.retarget(3, dest_ip=77, dest_qpn=23, va=0x2000, rkey=0xA)
+        assert (e.dest_ip, e.dest_qpn, e.va, e.rkey) == (77, 23, 0x2000, 0xA)
+        assert e.ack_psn == 99          # newcomer starts at the aggregate
+        t.add_forwarded(5)
+        with pytest.raises(ValueError, match="not a connected"):
+            t.retarget(5, 1, 2)
+
+    def test_1k_groups_claim_survives_a_churn_cycle(self):
+        """§3.3: 1K maximal groups (all 32 ports connected) fit in
+        0.92 MB — and still do after every group churns half its ports
+        out and back in; full teardown returns to zero."""
+        ft = ForwardingTables()
+        for g in range(1000):
+            t = ft.create(g)
+            for p in range(32):
+                t.add_connected(p, dest_ip=100 + p, dest_qpn=16 + p)
+        peak = ft.total_bytes()
+        assert peak <= 0.92e6
+        # churn: every group loses its even ports...
+        for g in range(1000):
+            t = ft.get(g)
+            for p in range(0, 32, 2):
+                t.remove_port(p)
+        halved = ft.total_bytes()
+        assert halved == peak - 1000 * 16 * (ENTRY_BYTES[CONNECTED] + 4)
+        # ...and regains them: back to the claimed footprint, not above
+        for g in range(1000):
+            t = ft.get(g)
+            for p in range(0, 32, 2):
+                t.add_connected(p, dest_ip=100 + p, dest_qpn=16 + p)
+        assert ft.total_bytes() == peak <= 0.92e6
+        # deregistration releases everything
+        for g in range(1000):
+            ft.remove(g)
+        assert ft.total_bytes() == 0
+
+
 # =========================================== eviction through a real switch
 
 def test_switch_table_capacity_evicts_oldest_group():

@@ -138,6 +138,31 @@ def test_registration_any_group_size(n):
     assert g.registered
 
 
+churn_event = st.one_of(
+    st.tuples(st.just("ack"), st.integers(min_value=1, max_value=6),
+              st.integers(min_value=0, max_value=300)),
+    st.tuples(st.just("add"), st.integers(min_value=1, max_value=6),
+              st.just(0)),
+    st.tuples(st.just("remove"), st.integers(min_value=1, max_value=6),
+              st.just(0)),
+)
+
+
+@settings(max_examples=200, **FAST)
+@given(base=st.integers(min_value=0, max_value=pk.PSN_MOD - 1),
+       events=st.lists(churn_event, min_size=1, max_size=80))
+def test_agg_min_tracks_bruteforce_under_churn_across_wrap(base, events):
+    """The cached aggregate minimum (``GroupTable.agg_min``) must equal
+    the brute-force windowed ``psn_min`` fold over the live ports at
+    every step — including mid-stream port installs (seeded from
+    ``last_ack_psn``), removals of the port OWNING the minimum, and PSN
+    streams that wrap through PSN_MOD (``base`` near the top).  The
+    emitted aggregated-ACK stream must advance in wrapped order.
+    (Driver shared with the deterministic fuzz in test_membership.)"""
+    from _membership_props import run_churn_case
+    run_churn_case(base, events)
+
+
 @settings(max_examples=60, **FAST)
 @given(a=st.integers(min_value=0, max_value=pk.PSN_MOD - 1),
        d=st.integers(min_value=0, max_value=(1 << 22) - 1))
