@@ -214,6 +214,10 @@ class QP:
     def on_nack(self, epsn: int, now: float) -> None:
         """Go-back-N: everything < ePSN is acked; retransmit from ePSN."""
         self.on_ack(pk.psn_sub(epsn, 1), now)
+        # a stale NACK (ePSN behind the cumulative ACK) must not rewind
+        # snd_nxt behind snd_una — that would leave outstanding() huge
+        # and the window permanently closed
+        epsn = pk.psn_max(epsn, self.snd_una)
         if pk.psn_gt(self.snd_nxt, epsn):
             self.retransmitted += pk.psn_sub(self.snd_nxt, epsn)
             self.snd_nxt = epsn

@@ -73,8 +73,11 @@ Fidelity note: the flow engines model serialization of the wire volume
 per-hop propagation and store-and-forward latency along each receiver's
 path.  Cross-validation against the packet engine on small topologies
 agrees within a few percent for >= 64KB messages (tests/test_engines.py
-asserts 10%); protocol-induced effects (loss recovery, DCQCN transients,
-ACK clocking) exist only in the packet engine.
+asserts 10%).  Loss recovery and DCQCN enter the flow engines as an
+expected-value correction (``core/flowsim.py``; calibrated to <= 15%
+of packet-engine ground truth across the fig15/16 loss grid —
+``tests/test_loss_model.py``); per-packet transients (ACK clocking,
+individual RTO samples) exist only in the packet engine.
 """
 from __future__ import annotations
 
@@ -240,8 +243,36 @@ class PacketEngine(_WorkloadStaging):
         self._staged: List = []                 # submission thunks
         # (record, n deliveries to wait for, completion policy or None)
         self._pending: List[Tuple[MsgRecord, int, Optional[Callable]]] = []
+        self._op_phys: Dict[str, float] = {}    # op-level fabric overrides
 
     # ------------------------------------------------------------ helpers
+
+    def stage(self, op: GroupOp) -> MsgRecord:
+        self._apply_op_phys(op)
+        return super().stage(op)
+
+    def _apply_op_phys(self, op: GroupOp) -> None:
+        """Apply a GroupOp's loss/ECN scenario parameters to the fabric.
+
+        Loss rate and ECN marking are *physical* — one fabric, one
+        value — so they are engine-global here (the flow engines can
+        honor them per-flow).  Two staged ops demanding different
+        non-None values is a modeling error, not a race to resolve.
+        """
+        sim = self.net.sim
+        for attr, val in (("loss_rate", op.loss_rate),
+                          ("ecn_backlog", op.ecn_backlog)):
+            if val is None:
+                continue
+            val = float(val)
+            prev = self._op_phys.setdefault(attr, val)
+            if prev != val:
+                raise ValueError(
+                    f"conflicting GroupOp.{attr} values on the packet "
+                    f"engine: {prev!r} vs {val!r} (the fabric {attr} is "
+                    "physical and global; run the ops in separate "
+                    "engines)")
+            setattr(sim, attr, val)
 
     def _group(self, members: Sequence[str]):
         """Get-or-register the group for a member set.
@@ -672,18 +703,35 @@ class FlowEngine(_WorkloadStaging):
     """
 
     def __init__(self, topo: Topology, *, backend: str = "auto",
-                 group_kw: Optional[dict] = None, **sim_kw):
+                 group_kw: Optional[dict] = None,
+                 relay_kw: Optional[dict] = None, loss_rate: float = 0.0,
+                 ecn_backlog: float = math.inf, seed: Optional[int] = None,
+                 **sim_kw):
         self.topo = topo
         if sim_kw:
-            # packet-engine physics (loss_rate, p4_mode, ...) have no
+            # remaining packet-engine physics (p4_mode, ...) have no
             # fluid counterpart; refusing beats silently comparing a
             # lossy packet run against an unknowingly lossless flow run
             raise TypeError("flow engines do not support packet-engine "
                             f"options: {sorted(sim_kw)}")
+        # loss_rate / ecn_backlog lower onto the expected-value loss
+        # model (core/flowsim.py); ``seed`` is accepted for kw-compat
+        # with the packet engine and ignored — the fluid loss model is
+        # the per-packet process's expectation, not one sample of it
+        if not 0.0 <= loss_rate < 1.0:
+            raise ValueError(f"loss_rate must be in [0, 1), got {loss_rate}")
+        if ecn_backlog <= 0.0:
+            raise ValueError(
+                f"ecn_backlog must be positive bytes, got {ecn_backlog}")
+        self.loss_rate = float(loss_rate)
+        self.ecn_backlog = float(ecn_backlog)
         # the slice of the packet engine's multicast-group tuning that
-        # the fluid dynamic-membership model consumes (``fail_detect``);
-        # accepted so one make_engine(**kw) dict drives both engines
+        # the fluid model consumes (``fail_detect``, go-back-N
+        # ``window`` / ``rto`` for the loss model); ``relay_kw`` is the
+        # same slice for the overlay relays' per-edge QPs.  Accepted so
+        # one make_engine(**kw) dict drives both engines
         self.group_kw = dict(group_kw or {})
+        self.relay_kw = dict(relay_kw or {})
         if backend not in ("auto", "jax", "np", "numpy"):
             raise ValueError(f"unknown flow backend {backend!r}")
         use_jax = False
@@ -702,6 +750,12 @@ class FlowEngine(_WorkloadStaging):
         self._staged: List[tuple] = []           # (links, volume, rec, info)
         self._post: List[Callable[[float], float]] = []   # composite fins
         self._lat_memo: Dict[tuple, Tuple[float, float]] = {}
+        # piecewise-membership timelines of dynamic ops, keyed by the
+        # id() of their hidden record: [(t_rel, tree_links), ...] — the
+        # finalizers' fairness snapshots look up what OTHER scenario
+        # flows occupy at a segment boundary (see _stage_dynamic)
+        self._dyn_links: Dict[int, List[Tuple[float, tuple]]] = {}
+        self._fin_staged: Optional[List[tuple]] = None
         self._next_msg = 0
         self.now = 0.0
 
@@ -727,11 +781,54 @@ class FlowEngine(_WorkloadStaging):
                 (prop + sf, prop)
         return memo
 
+    # --------------------------------------------------------- loss model
+
+    def _loss_params(self, links, *, nbytes: int, rtt: float, tuning: dict,
+                     op: Optional[GroupOp] = None, parallel: int = 1):
+        """Fold one flow's loss/ECN scenario into ``flowsim.LossParams``.
+
+        ``links`` is the flow's link set (tree union or unicast path);
+        ``rtt`` the sender's round trip (2x the slowest return
+        propagation — the NACK/ACK turnaround the go-back-N replay
+        sees); ``tuning`` the QP kwargs dict this flow would get on the
+        packet engine (``group_kw`` for native multicast, ``relay_kw``
+        for overlay relay edges), consulted for ``window`` / ``rto``.
+        Op-level ``loss_rate`` / ``ecn_backlog`` override the
+        engine-level setting.  Returns None when the flow is unaffected
+        so zero-loss staging keeps the exact lossless path.
+        """
+        p, backlog = self.loss_rate, self.ecn_backlog
+        if op is not None:
+            if op.loss_rate is not None:
+                p = float(op.loss_rate)
+            if op.ecn_backlog is not None:
+                backlog = float(op.ecn_backlog)
+        ecn = math.isfinite(backlog)
+        if (p <= 0.0 and not ecn) or not links:
+            return None
+        from repro.core.flowsim import LossParams
+        sim = self._sim
+        return LossParams.build(
+            loss_rate=p,
+            # only switch-egress hops drop (packetsim drops iff
+            # from_switch): count them over the whole tree — any tree
+            # copy lost rolls the one go-back-N sender back
+            lossy_hops=float(sum(sim.lossy[i] for i in links)),
+            rtt=rtt,
+            pkt_wire=float(wire_bytes(min(nbytes, pk.MTU))),
+            cap_min=float(min(sim.cap[i] for i in links)),
+            window=float(tuning.get("window", 256)),
+            n_pkts=float(max(1, math.ceil(nbytes / pk.MTU))),
+            rto=float(tuning.get("rto", 200e-6)),
+            ecn=ecn,
+            parallel=float(max(parallel, 1)))
+
     # ----------------------------------------------------------- lowering
 
     def _stage(self, links, volume: float, rec: MsgRecord,
-               deliver: Dict[str, float], cqe_extra: float) -> MsgRecord:
-        self._staged.append((links, volume, rec, deliver, cqe_extra))
+               deliver: Dict[str, float], cqe_extra: float,
+               loss=None) -> MsgRecord:
+        self._staged.append((links, volume, rec, deliver, cqe_extra, loss))
         return rec
 
     def _new_rec(self, nbytes: int) -> MsgRecord:
@@ -740,7 +837,8 @@ class FlowEngine(_WorkloadStaging):
         return rec
 
     def _mcast(self, members: Sequence[str], nbytes: int, volume: float,
-               source: Optional[str], key: int) -> MsgRecord:
+               source: Optional[str], key: int,
+               op: Optional[GroupOp] = None) -> MsgRecord:
         source = source or members[0]
         links = self._sim.multicast_tree_links(source, members, key)
         rec = self._new_rec(nbytes)
@@ -752,7 +850,9 @@ class FlowEngine(_WorkloadStaging):
             lat, prop = self._path_latency(source, m, seg, key)
             deliver[m] = lat
             back = max(back, prop)
-        return self._stage(links, volume, rec, deliver, back)
+        loss = self._loss_params(links, nbytes=nbytes, rtt=2.0 * back,
+                                 tuning=self.group_kw, op=op)
+        return self._stage(links, volume, rec, deliver, back, loss)
 
     def _stage_native(self, op: GroupOp) -> MsgRecord:
         if op.events:
@@ -761,7 +861,8 @@ class FlowEngine(_WorkloadStaging):
         if op.op == "write" and not op.same_mr:
             # §3.3: the MR_UPDATE preamble rides the same tree
             volume += wire_bytes(12 * (len(op.members) - 1) + 16)
-        return self._mcast(op.members, op.nbytes, volume, op.source, op.key)
+        return self._mcast(op.members, op.nbytes, volume, op.source, op.key,
+                           op=op)
 
     def _stage_dynamic(self, op: GroupOp) -> MsgRecord:
         """Dynamic-membership lowering: piecewise-membership segments.
@@ -770,8 +871,15 @@ class FlowEngine(_WorkloadStaging):
         timeline is cut at each ``MemberEvent`` into segments of
         constant membership.  One hidden solver flow over the INITIAL
         tree yields the contended baseline rate ``r0``; segment ``k``
-        runs at ``r0 * mincap(T_k) / mincap(T_0)`` (for a scenario-lone
-        flow this is exactly the max-min rate of each segment's tree).
+        runs at ``r0 * fair(T_k) / fair(T_0)``, where ``fair(T)`` is a
+        static max-min snapshot (``flowsim.static_maxmin``) of this
+        op's segment tree against every OTHER flow in the scenario —
+        other dynamic ops contribute *their* segment tree at that
+        instant (via the ``_dyn_links`` timeline registry), so two
+        overlapping dynamic ops contend correctly through their
+        membership changes.  For a scenario-lone flow the snapshot
+        reduces to ``mincap(T_k)``, the max-min rate of each segment's
+        tree (bit-identical to the pre-snapshot behavior).
         A ``fail`` wedges the sender (the dead port freezes the
         aggregate minimum) but the go-back-N window keeps draining to
         the live receivers: the fluid image lets ``min(remaining,
@@ -796,8 +904,7 @@ class FlowEngine(_WorkloadStaging):
         fail_detect = float(self.group_kw.get("fail_detect",
                                               DEFAULT_FAIL_DETECT))
 
-        def mincap(ms) -> float:
-            links = sim.multicast_tree_links(source, ms, key)
+        def mincap(links) -> float:
             if not links:                   # no receivers left
                 return cap0
             return float(min(sim.cap[i] for i in links))
@@ -805,20 +912,23 @@ class FlowEngine(_WorkloadStaging):
         links0 = sim.multicast_tree_links(source, members, key)
         cap0 = float(min(sim.cap[i] for i in links0))
         events = op.sorted_events()
-        # membership timeline -> typed steps: ("cap", at, new_tree_cap)
-        # for join/leave, ("fail", at, cap_after_isolation) for fails
+        # membership timeline -> typed steps carrying the segment's
+        # tree: ("cap", at, tree) for join/leave, ("fail", at,
+        # tree_after_isolation) for fails
         present = list(members)
-        steps: List[Tuple[str, float, float]] = []
+        steps: List[Tuple[str, float, tuple]] = []
         for ev in events:
             if ev.kind == "join":
                 present.append(ev.member)
-                steps.append(("cap", ev.at, mincap(present)))
-            elif ev.kind == "leave":
+                steps.append(("cap", ev.at,
+                              sim.multicast_tree_links(source, present,
+                                                       key)))
+            elif ev.kind in ("leave", "fail"):
                 present.remove(ev.member)
-                steps.append(("cap", ev.at, mincap(present)))
-            elif ev.kind == "fail":
-                present.remove(ev.member)
-                steps.append(("fail", ev.at, mincap(present)))
+                steps.append((("fail" if ev.kind == "fail" else "cap"),
+                              ev.at,
+                              sim.multicast_tree_links(source, present,
+                                                       key)))
             # master-switch: no effect on the in-flight message
         # go-back-N window in wire bytes: what the sender can still push
         # past a frozen cumulative ACK before it wedges
@@ -830,13 +940,51 @@ class FlowEngine(_WorkloadStaging):
                    if m != source}
         rec = self._new_rec(op.nbytes)
         hidden = self._new_rec(op.nbytes)
-        self._stage(links0, volume, hidden, {}, 0.0)
+        back0 = max((latency[m][1] for m in members if m != source),
+                    default=0.0)
+        loss = self._loss_params(links0, nbytes=op.nbytes, rtt=2.0 * back0,
+                                 tuning=self.group_kw, op=op)
+        self._stage(links0, volume, hidden, {}, 0.0, loss)
+        self._dyn_links[id(hidden)] = \
+            [(0.0, links0)] + [(at, ls) for _, at, ls in steps]
+
+        def other_links_at(t_rel: float) -> List[tuple]:
+            """Link sets every OTHER flow of the scenario occupies at
+            ``t_rel`` (dynamic ops via their segment timeline)."""
+            others = []
+            for entry in self._fin_staged or []:
+                o_links, o_rec = entry[0], entry[2]
+                if o_rec is hidden:
+                    continue
+                timeline = self._dyn_links.get(id(o_rec))
+                if timeline is not None:
+                    for at, ls in timeline:
+                        if at <= t_rel:
+                            o_links = ls
+                        else:
+                            break
+                if o_links:
+                    others.append(o_links)
+            return others
+
+        def fair(links_now, t_rel: float) -> float:
+            """Static max-min snapshot of this op's segment tree against
+            the co-scenario flows; mincap for a scenario-lone flow."""
+            if not links_now:
+                return cap0
+            others = other_links_at(t_rel)
+            if not others:
+                return mincap(links_now)
+            from repro.core.flowsim import static_maxmin
+            rates = static_maxmin(sim.cap, others + [links_now])
+            return float(rates[-1])
 
         def fin(t0: float) -> float:
             r0 = volume / (hidden.t_sender_cqe - t0)
-            remaining, t_rel, cap_now = volume, 0.0, cap0
-            for kind, at, cap_next in steps + [("cap", math.inf, cap0)]:
-                rate = r0 * (cap_now / cap0)
+            fair0 = fair(links0, 0.0)
+            remaining, t_rel, fair_now = volume, 0.0, fair0
+            for kind, at, links_next in steps + [("cap", math.inf, links0)]:
+                rate = r0 * (fair_now / fair0)
                 if at > t_rel:
                     if remaining <= rate * (at - t_rel):
                         t_rel += remaining / rate
@@ -855,7 +1003,7 @@ class FlowEngine(_WorkloadStaging):
                     remaining -= drain
                     # ... then the sender wedges until isolation
                     t_rel = max(t_rel + drain / rate, at + fail_detect)
-                cap_now = cap_next
+                fair_now = fair(links_next, at)
             done = t0 + t_rel
             receivers = set(members)
             for ev in events:               # membership at completion
@@ -900,8 +1048,12 @@ class FlowEngine(_WorkloadStaging):
             links = self._sim.unicast_links(parent, child, op.key)
             lat, prop = self._path_latency(parent, child, seg, op.key)
             hidden = self._new_rec(chunk)
+            # the op completes at the MAX over its relay flows
+            loss = self._loss_params(links, nbytes=chunk, rtt=2.0 * prop,
+                                     tuning=self.relay_kw, op=op,
+                                     parallel=len(plan))
             self._stage(links, float(wire_bytes(chunk)), hidden,
-                        {child: lat}, prop)
+                        {child: lat}, prop, loss)
             comp.append((child, hidden, lat, prop))
 
         if not transport.chunked:               # multiunicast: direct flows
@@ -949,14 +1101,18 @@ class FlowEngine(_WorkloadStaging):
         red = []
         for m in members[1:]:
             links = self._sim.unicast_links(m, root, op.key)
-            lat, _ = self._path_latency(m, root, seg, op.key)
+            lat, prop = self._path_latency(m, root, seg, op.key)
             hidden = self._new_rec(op.nbytes)
+            loss = self._loss_params(links, nbytes=op.nbytes,
+                                     rtt=2.0 * prop, tuning=self.relay_kw,
+                                     op=op, parallel=len(members) - 1)
             self._stage(links, float(wire_bytes(op.nbytes)), hidden,
-                        {root: lat}, 0.0)
+                        {root: lat}, 0.0, loss)
             red.append(hidden)
 
         bop = GroupOp("bcast", tuple(members), op.nbytes,
-                      transport=op.transport, key=op.key, chunks=op.chunks)
+                      transport=op.transport, key=op.key, chunks=op.chunks,
+                      loss_rate=op.loss_rate, ecn_backlog=op.ecn_backlog)
         brec = self._stage_native(bop) if transport.native \
             else self._stage_overlay(bop, transport)
 
@@ -978,7 +1134,10 @@ class FlowEngine(_WorkloadStaging):
         rec = self._new_rec(nbytes)
         seg = wire_bytes(min(nbytes, pk.MTU))
         lat, prop = self._path_latency(src, dst, seg, key)
-        return self._stage(links, wire_bytes(nbytes), rec, {dst: lat}, prop)
+        loss = self._loss_params(links, nbytes=nbytes, rtt=2.0 * prop,
+                                 tuning=self.relay_kw)
+        return self._stage(links, wire_bytes(nbytes), rec, {dst: lat}, prop,
+                           loss)
 
     # ------------------------------------------------------------ drivers
 
@@ -986,7 +1145,7 @@ class FlowEngine(_WorkloadStaging):
         """Turn solver completion times into record bookkeeping;
         returns the scenario's end time (latest sender CQE)."""
         end = t0
-        for f, (_, _, rec, deliver, back) in zip(flows, staged):
+        for f, (_, _, rec, deliver, back, _) in zip(flows, staged):
             for m, lat in deliver.items():
                 rec.t_deliver[m] = t0 + f.done_t + lat
             rec.t_sender_cqe = (max(rec.t_deliver.values()) + back
@@ -996,8 +1155,10 @@ class FlowEngine(_WorkloadStaging):
 
     def _finalize(self, staged, post, flows, t0: float) -> float:
         end = self._backfill(staged, flows, t0)
+        self._fin_staged = staged               # fairness-snapshot scope
         for fin in post:                        # composite records
             end = max(end, fin(t0))
+        self._fin_staged = None
         return end
 
     def run(self, timeout: float = 30.0) -> float:
@@ -1005,12 +1166,13 @@ class FlowEngine(_WorkloadStaging):
             return self.now
         sim = self._sim                          # reuse routing + caps
         sim.flows, sim.now = [], 0.0             # fresh batch, epoch-local t
-        flows = [sim.add(links, volume)
-                 for links, volume, _, _, _ in self._staged]
+        flows = [sim.add(links, volume, loss=loss)
+                 for links, volume, _, _, _, loss in self._staged]
         sim.run()
         self.now = max(self.now, self._finalize(self._staged, self._post,
                                                 flows, self.now))
         self._staged, self._post = [], []
+        self._dyn_links.clear()
         return self.now
 
     def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0,
@@ -1034,8 +1196,8 @@ class FlowEngine(_WorkloadStaging):
             metas.append((self._staged, self._post))
             self._staged, self._post = [], []
         sim.flows, sim.now = [], 0.0
-        epoch_flows = [[sim.add(links, volume)
-                        for links, volume, _, _, _ in staged]
+        epoch_flows = [[sim.add(links, volume, loss=loss)
+                        for links, volume, _, _, _, loss in staged]
                        for staged, _ in metas]
         if hasattr(sim, "solve_many"):           # vmapped batch (JAX)
             sim.solve_many(epoch_flows)
@@ -1046,6 +1208,7 @@ class FlowEngine(_WorkloadStaging):
         ends = [self._finalize(staged, post, flows, t0)
                 for (staged, post), flows in zip(metas, epoch_flows)]
         self.now = max([self.now] + ends)
+        self._dyn_links.clear()
         return ends
 
 
@@ -1076,8 +1239,11 @@ def make_engine(name: str, topo: Topology, **kw) -> SimEngine:
     ``GleamNetwork``/``PacketSim`` (``loss_rate``, ``seed``, ``p4_mode``,
     ``ecn_backlog``, plus ``group_kw`` / ``relay_kw`` for multicast-group
     and overlay-relay tuning); the flow engines accept ``backend``
-    ('auto' | 'jax' | 'np').  Unknown names raise ValueError listing
-    the valid ones.
+    ('auto' | 'jax' | 'np') plus the same ``loss_rate`` /
+    ``ecn_backlog`` / ``seed`` / ``group_kw`` / ``relay_kw`` slice
+    (lowered onto the expected-value loss model), so one kwargs dict
+    drives a differential packet-vs-flow comparison.  Unknown names
+    raise ValueError listing the valid ones.
     """
     factory = _ENGINES.get(name)
     if factory is None:

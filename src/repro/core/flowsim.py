@@ -28,13 +28,51 @@ its Gleam counterpart contend on identical fabric paths.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.fattree import Topology
 
 INF = float("inf")
+
+# --------------------------------------------------------------------------
+# Expected-value loss model — calibration constants.
+#
+# The flow engines replace the packet engine's per-packet drop/NACK/RTO
+# machinery with a per-flow rate multiplier plus an additive completion
+# tail (docs/ARCHITECTURE.md "Loss & congestion model").  The three CAL_*
+# constants below were fitted against fixed-seed packet-engine ground
+# truth (32-seed means, testbed topology, 1 MiB flows, window=512,
+# gleam + multiunicast x group 4/8 x loss 1e-3/1e-2) and hold every
+# fitted point within ~11%:
+#
+# - GBN_REPLAY_CAL: a drop costs ``W = CAL * sqrt(bdp_flow * bdp_link)``
+#   replayed packets (geometric mean of flow- and link-BDP — the NACK
+#   turnaround sees the *link* RTT while replay drains at the *flow*
+#   rate), giving goodput fraction ``(1-q) / (1-q + q W)``.
+# - GBN_MERGE_CAL: multicast NACK aggregation merges rollbacks when
+#   independent drops on L > 1 lossy hops land in one window; damps W
+#   by ``1 + CAL * q * bdp_link * (1 - 1/L)``.
+# - GBN_RTO_CAL: tail-drop recoveries that need a timeout instead of a
+#   NACK add an expected stall ``rto * (CAL * n_pkts * q * p + q)``
+#   applied to the completion time, not the rate (the bandwidth is
+#   free during the stall for OTHER flows, which the packet engine
+#   confirms: post-RTO flows catch up at full rate).
+GBN_REPLAY_CAL = 0.84
+GBN_MERGE_CAL = 0.25
+GBN_RTO_CAL = 0.6
+
+# DCQCN equilibrium (endpoint.py:RateState defaults: +5 Gbit/s per 55 us
+# recovery period, receiver CNPs paced at 50 us, 1 Gbit/s floor).  At
+# the sawtooth fixed point rate-cut == recovery between CNPs, so
+# ``alpha_eq = DCQCN_RATE_NUM / rate`` and the mean undershoot below
+# the fair share is ``alpha_eq / 4``.
+DCQCN_RATE_NUM = 2.0 * (5e9 / 8.0) * 50e-6 / 55e-6      # bytes/s
+DCQCN_MIN_RATE = 1e9 / 8.0                              # bytes/s
+# a link is ECN-"hot" when >= 2 active flows hold it at capacity
+ECN_UTIL_EPS = 1e-3
 
 
 class LinkMap:
@@ -49,12 +87,18 @@ class LinkMap:
         self.link_id: Dict[Tuple[str, int], int] = {}
         caps: List[float] = []
         delays: List[float] = []
+        lossy: List[float] = []
+        switches = set(topo.switches)
         for (node, port), link in topo.links.items():
             self.link_id[(node, port)] = len(caps)
             caps.append(link.bw)
             delays.append(link.delay)
+            # the packet engine drops only on switch egress (packetsim
+            # drops DATA iff from_switch), so host uplinks are lossless
+            lossy.append(1.0 if node in switches else 0.0)
         self.cap = np.asarray(caps, float)
         self.delay = np.asarray(delays, float)
+        self.lossy = np.asarray(lossy, float)
         self._path_memo: Dict[Tuple[str, str, int], Tuple[int, ...]] = {}
 
     def unicast_links(self, src: str, dst: str, key: int = 0):
@@ -83,6 +127,55 @@ class LinkMap:
         return tuple(sorted(links))
 
 
+@dataclasses.dataclass(frozen=True)
+class LossParams:
+    """Pre-folded per-flow loss-model inputs (see module constants).
+
+    ``q`` is the per-packet probability that at least one tree copy is
+    dropped; ``wsq`` folds the calibrated replay window and NACK-merge
+    damping so the replay cost in packets is ``sqrt(rate * wsq)``
+    (capped at ``wnd``, the go-back-N window); ``tail`` is the expected
+    additive RTO stall added to the completion time; ``ecn`` turns on
+    the DCQCN correction for shared saturated links.
+    """
+
+    q: float
+    wsq: float
+    wnd: float
+    tail: float
+    ecn: bool = False
+
+    @classmethod
+    def build(cls, *, loss_rate: float, lossy_hops: float, rtt: float,
+              pkt_wire: float, cap_min: float, window: float,
+              n_pkts: float, rto: float, ecn: bool = False,
+              parallel: float = 1.0) -> Optional["LossParams"]:
+        """Fold raw scenario parameters into solver inputs.
+
+        ``parallel`` is the number of sibling lossy flows racing to the
+        same op completion (a multiunicast/overlay fan-out finishes at
+        the MAX over its K independent flows; the RTO stall is
+        exponential-tailed, so the expected max exceeds the per-flow
+        expectation by ~``ln K`` stall scales — Gumbel's correction).
+        Returns None when the flow is unaffected (zero effective loss
+        and no ECN marking) so callers can keep the exact lossless
+        code path — the zero-loss flow results stay bit-identical.
+        """
+        hops = max(float(lossy_hops), 0.0)
+        p = float(loss_rate)
+        q = 1.0 - (1.0 - p) ** hops if p > 0.0 and hops > 0.0 else 0.0
+        if q <= 0.0 and not ecn:
+            return None
+        bdp_link = cap_min * rtt / pkt_wire         # link BDP, packets
+        merge = 1.0 + GBN_MERGE_CAL * q * bdp_link * (1.0 - 1.0 / hops) \
+            if hops > 1.0 else 1.0
+        wsq = (GBN_REPLAY_CAL / merge) ** 2 * (rtt / pkt_wire) * bdp_link
+        tail = rto * (GBN_RTO_CAL * n_pkts * q * p + q) \
+            * (1.0 + math.log(max(float(parallel), 1.0)))
+        return cls(q=q, wsq=wsq, wnd=float(window), tail=tail,
+                   ecn=bool(ecn))
+
+
 @dataclasses.dataclass
 class Flow:
     """One staged flow.  ``volume`` is the STAGED byte count and is
@@ -95,10 +188,53 @@ class Flow:
     done_t: float = -1.0
     rate: float = 0.0
     tag: object = None
+    loss: Optional[LossParams] = None
 
     def __post_init__(self):
         if self.remaining < 0.0:
             self.remaining = self.volume
+
+
+def static_maxmin(cap: np.ndarray, link_sets: Sequence[Sequence[int]]):
+    """Max-min fair rates for a static flow set by progressive filling.
+
+    ``cap`` is the dense capacity vector (bytes/s, NOT mutated);
+    ``link_sets`` one link-id sequence per flow.  Returns (F,) rates.
+    Shared by the solver hot path (``FlowSim._allocate``) and the
+    engine's piecewise-membership fairness snapshots
+    (``engine.FlowEngine._stage_dynamic``).
+    """
+    flow_links = [np.asarray(ls, int) for ls in link_sets]
+    n = len(flow_links)
+    rates = np.zeros(n)
+    frozen = np.zeros(n, bool)
+    cap = np.asarray(cap, float).copy()
+    for _ in range(64):                     # bottleneck rounds
+        cnt = np.zeros(len(cap))
+        for i, ls in enumerate(flow_links):
+            if not frozen[i]:
+                cnt[ls] += 1.0
+        hot = cnt > 0
+        if not hot.any():
+            break
+        share = np.full(len(cap), INF)
+        share[hot] = cap[hot] / cnt[hot]
+        # each unfrozen flow is limited by its tightest link
+        limit = np.array([share[ls].min() if not frozen[i] else INF
+                          for i, ls in enumerate(flow_links)])
+        b = limit.min()
+        # freeze flows crossing a bottleneck link (share == b)
+        newly = (~frozen) & (limit <= b * (1 + 1e-12))
+        if not newly.any():
+            break
+        for i in np.where(newly)[0]:
+            rates[i] = b
+            cap[flow_links[i]] -= b
+            frozen[i] = True
+        cap = np.maximum(cap, 0.0)
+        if frozen.all():
+            break
+    return np.maximum(rates, 1e-9)
 
 
 class FlowSim(LinkMap):
@@ -109,8 +245,8 @@ class FlowSim(LinkMap):
 
     # ------------------------------------------------------------ engine
 
-    def add(self, links, volume, tag=None) -> Flow:
-        f = Flow(tuple(links), float(volume), tag=tag)
+    def add(self, links, volume, tag=None, loss=None) -> Flow:
+        f = Flow(tuple(links), float(volume), tag=tag, loss=loss)
         self.flows.append(f)
         return f
 
@@ -118,53 +254,57 @@ class FlowSim(LinkMap):
         """Max-min fair rates by progressive filling (vectorized)."""
         if not active:
             return
-        flow_links = [np.asarray(f.links, int) for f in active]
-        n = len(active)
-        rates = np.zeros(n)
-        frozen = np.zeros(n, bool)
-        cap = self.cap.copy()
-        for _ in range(64):                     # bottleneck rounds
-            cnt = np.zeros(len(cap))
-            for i, ls in enumerate(flow_links):
-                if not frozen[i]:
-                    cnt[ls] += 1.0
-            hot = cnt > 0
-            if not hot.any():
-                break
-            share = np.full(len(cap), INF)
-            share[hot] = cap[hot] / cnt[hot]
-            # each unfrozen flow is limited by its tightest link
-            limit = np.array([share[ls].min() if not frozen[i] else INF
-                              for i, ls in enumerate(flow_links)])
-            b = limit.min()
-            # freeze flows crossing a bottleneck link (share == b)
-            newly = (~frozen) & (limit <= b * (1 + 1e-12))
-            if not newly.any():
-                break
-            for i in np.where(newly)[0]:
-                rates[i] = b
-                cap[flow_links[i]] -= b
-                frozen[i] = True
-            cap = np.maximum(cap, 0.0)
-            if frozen.all():
-                break
+        rates = static_maxmin(self.cap, [f.links for f in active])
         for f, r in zip(active, rates):
-            f.rate = max(r, 1e-9)
+            f.rate = r
+
+    def _apply_loss(self, active: List[Flow]):
+        """Scale solved rates by the expected-value loss/DCQCN factors.
+
+        The numpy twin of ``kernels/ref.py:loss_factors_reference``:
+        identical math, applied to ``Flow.rate`` in place.
+        """
+        util = np.zeros(len(self.cap))
+        cnt = np.zeros(len(self.cap))
+        for f in active:
+            ls = np.asarray(f.links, int)
+            util[ls] += f.rate
+            cnt[ls] += 1.0
+        hot = (cnt >= 2.0) & (util >= self.cap * (1.0 - ECN_UTIL_EPS))
+        for f in active:
+            lp = f.loss
+            if lp is None:
+                continue
+            w = min(math.sqrt(max(f.rate * lp.wsq, 0.0)), lp.wnd)
+            gbn = (1.0 - lp.q) / max(1.0 - lp.q + lp.q * w, 1e-30)
+            dc = 1.0
+            if lp.ecn and hot[np.asarray(f.links, int)].any():
+                alpha = min(DCQCN_RATE_NUM / max(f.rate, 1e-30), 1.0)
+                dc = max(1.0 - 0.25 * alpha,
+                         min(DCQCN_MIN_RATE / max(f.rate, 1e-30), 1.0))
+            f.rate *= min(max(gbn * dc, 1e-9), 1.0)
 
     def run(self) -> float:
         """Run until every flow completes; returns the final time."""
         active = [f for f in self.flows if f.done_t < 0]
+        lossy = any(f.loss is not None for f in active)
         while active:
             self._allocate(active)
+            if lossy:
+                self._apply_loss(active)
             dt = min(f.remaining / f.rate for f in active)
             self.now += dt
             still = []
             for f in active:
                 f.remaining -= f.rate * dt
                 if f.remaining <= 1e-6 * max(f.rate, 1.0):
-                    f.done_t = self.now
+                    # RTO stalls delay completion but free the fabric:
+                    # the tail is added to done_t, not simulated time
+                    f.done_t = self.now + (f.loss.tail if f.loss else 0.0)
                     f.remaining = 0.0
                 else:
                     still.append(f)
             active = still
+        if self.flows:
+            return max(self.now, max(f.done_t for f in self.flows))
         return self.now

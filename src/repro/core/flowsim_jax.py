@@ -129,7 +129,7 @@ if HAS_JAX:
         from repro.kernels.maxmin import maxmin_rates
         return maxmin_rates(flow_links, cap, active, mode=mode)
 
-    def _simulate(flow_links, cap, vol, mode="auto", warm=True):
+    def _simulate(flow_links, cap, vol, loss=None, mode="auto", warm=True):
         """Fluid event loop: completion times (F,) for every flow.
 
         ``warm`` compiles in the completion-epoch warm start: when an
@@ -139,10 +139,23 @@ if HAS_JAX:
         ``lax.cond`` lowers to a select that executes both branches, so
         the skip can never fire and the dirty tracking would be pure
         per-epoch overhead.
+
+        ``loss`` (a ``(q, wsq, wnd, ecn)`` tuple of (F,) arrays, or
+        None) compiles in the expected-value loss/DCQCN correction: the
+        solved max-min rates are scaled by ``kernels/maxmin.py``'s
+        fused ``loss_factors`` each epoch.  The loop state carries the
+        RAW max-min rates (so the warm start stays valid and factors
+        are never applied twice); only ``dt`` and the drained bytes use
+        the effective rates.  ``loss=None`` traces the exact lossless
+        graph — zero-loss results are bit-identical.
         """
         n_flows = flow_links.shape[0]
         n_caps = cap.shape[0]
         eps = vol * 1e-6 + 1.0                  # completion slack (bytes)
+        if loss is not None:
+            from repro.core.flowsim import DCQCN_MIN_RATE, DCQCN_RATE_NUM
+            from repro.kernels.maxmin import loss_factors
+            q, wsq, wnd, ecn = loss
 
         def cond(st):
             _, rem, _, _, _, it = st
@@ -159,9 +172,15 @@ if HAS_JAX:
                     lambda r: r, rates)
             else:
                 rates = _maxmin_rates(flow_links, cap, active, mode)
-            dt = jnp.min(jnp.where(active, rem / rates, jnp.inf))
+            eff = rates
+            if loss is not None:
+                eff = rates * loss_factors(
+                    flow_links, rates, active.astype(cap.dtype), cap,
+                    q, wsq, wnd, ecn, dcqcn_num=DCQCN_RATE_NUM,
+                    dcqcn_min=DCQCN_MIN_RATE, mode=mode)
+            dt = jnp.min(jnp.where(active, rem / eff, jnp.inf))
             t = t + dt
-            rem = jnp.where(active, rem - rates * dt, 0.0)
+            rem = jnp.where(active, rem - eff * dt, 0.0)
             fin = active & (rem <= eps)
             done = jnp.where(fin, t, done)
             rem = jnp.where(fin, 0.0, rem)
@@ -182,18 +201,30 @@ if HAS_JAX:
         _, _, done, _, _, _ = lax.while_loop(cond, body, init)
         return done
 
-    @functools.lru_cache(maxsize=None)
-    def _solver(batched: bool, mode: str = "auto"):
-        """Jitted solver, built once per (batched, kernel-mode) flavor.
+    def _solver(batched: bool, mode: str = "auto", lossy: bool = False):
+        """Jitted solver, one per (batched, kernel-mode, lossy) flavor.
 
         ``mode`` is the resolved ``kernels/maxmin.py`` dispatch (part
         of the jit cache key, so a ``REPRO_MAXMIN`` change takes effect
-        immediately instead of hitting a stale executable).
-        ``donate_argnums`` hands the volume buffer back to XLA (a no-op
-        on backends without donation support, e.g. CPU).
+        immediately instead of hitting a stale executable).  ``lossy``
+        selects the flavor that threads the per-flow loss arrays —
+        lossless solves keep their exact pre-existing executable.
         """
+        # normalize BEFORE the lru_cache: positional and defaulted
+        # calls must land on the same memoized jit object (the
+        # cache-hit tests introspect it via the two-arg form)
+        return _solver_impl(bool(batched), mode, bool(lossy))
+
+    @functools.lru_cache(maxsize=None)
+    def _solver_impl(batched: bool, mode: str, lossy: bool):
+        """``donate_argnums`` hands the volume buffer back to XLA (a
+        no-op on backends without donation support, e.g. CPU)."""
         sim = functools.partial(_simulate, mode=mode, warm=not batched)
-        fn = jax.vmap(sim, in_axes=(0, None, 0)) if batched else sim
+        if batched:
+            fn = jax.vmap(sim, in_axes=(0, None, 0, 0) if lossy
+                          else (0, None, 0))
+        else:
+            fn = sim
         donate = (2,) if jax.default_backend() not in ("cpu",) else ()
         return jax.jit(fn, donate_argnums=donate)
 
@@ -222,10 +253,10 @@ class JaxFlowSim(LinkMap):
         self.now = 0.0
         self.solve_dtype = None          # dtype of the last solve
 
-    def add(self, links, volume, tag=None) -> Flow:
+    def add(self, links, volume, tag=None, loss=None) -> Flow:
         links = tuple(links)
         assert links, "a flow must traverse at least one link"
-        f = Flow(links, float(volume), tag=tag)
+        f = Flow(links, float(volume), tag=tag, loss=loss)
         self.flows.append(f)
         return f
 
@@ -255,10 +286,28 @@ class JaxFlowSim(LinkMap):
                 _bucket(h, self.H_BUCKET_MIN)
         return n, h
 
+    def _pack_loss(self, flows: Sequence[Flow], dtype, f_pad: int):
+        """(q, wsq, wnd, ecn) per-flow loss-model rows, each (f_pad,).
+
+        All-zero rows — padding and lossless flows — solve at factor
+        exactly 1, so mixing lossy and lossless flows in one epoch is
+        fine.
+        """
+        arrs = np.zeros((4, f_pad), dtype)
+        for i, f in enumerate(flows):
+            lp = f.loss
+            if lp is not None:
+                arrs[0, i] = lp.q
+                arrs[1, i] = lp.wsq
+                arrs[2, i] = lp.wnd
+                arrs[3, i] = 1.0 if lp.ecn else 0.0
+        return tuple(arrs)
+
     def _cap_ext(self, dtype):
         return np.append(self.cap, np.inf).astype(dtype)
 
-    def _dispatch(self, batched: bool, fl, cap, vol, dtype) -> np.ndarray:
+    def _dispatch(self, batched: bool, fl, cap, vol, dtype,
+                  loss=None) -> np.ndarray:
         """Run the jitted solver (under x64 when promoted), timed.
 
         The ``jnp.asarray`` conversions MUST happen inside the x64
@@ -266,13 +315,15 @@ class JaxFlowSim(LinkMap):
         float32 and the promotion is lost.
         """
         from repro.kernels.maxmin import _resolve_mode
-        solve = _solver(batched, _resolve_mode())
+        solve = _solver(batched, _resolve_mode(), loss is not None)
         ctx = enable_x64() if dtype == np.float64 \
             else contextlib.nullcontext()
         t0 = time.perf_counter()
         with ctx:
-            done = np.asarray(solve(jnp.asarray(fl), jnp.asarray(cap),
-                                    jnp.asarray(vol)))
+            args = [jnp.asarray(fl), jnp.asarray(cap), jnp.asarray(vol)]
+            if loss is not None:
+                args.append(tuple(jnp.asarray(a) for a in loss))
+            done = np.asarray(solve(*args))
         with _STATS_LOCK:
             SOLVE_STATS["solve_s"] += time.perf_counter() - t0
             SOLVE_STATS["calls"] += 1
@@ -280,11 +331,19 @@ class JaxFlowSim(LinkMap):
         return done
 
     def _finish(self, flows: Sequence[Flow], done: np.ndarray) -> float:
-        """Back-fill completion bookkeeping WITHOUT touching volumes."""
+        """Back-fill completion bookkeeping WITHOUT touching volumes.
+
+        A flow's expected RTO stall (``LossParams.tail``) lands here:
+        it delays the completion timestamp without occupying fabric
+        time in the solve (the bandwidth is free during the stall).
+        """
+        end = 0.0
         for f, d in zip(flows, done):
-            f.done_t = float(d)
+            f.done_t = float(d) + \
+                (f.loss.tail if f.loss is not None else 0.0)
             f.remaining = 0.0
-        return float(done[:len(flows)].max()) if len(flows) else 0.0
+            end = max(end, f.done_t)
+        return end
 
     def run(self) -> float:
         if not self.flows:
@@ -294,7 +353,10 @@ class JaxFlowSim(LinkMap):
         self.solve_dtype = dtype
         f_pad, h_pad = self._shape(flows)
         fl, vol = self._pack(flows, dtype, f_pad, h_pad)
-        done = self._dispatch(False, fl, self._cap_ext(dtype), vol, dtype)
+        loss = self._pack_loss(flows, dtype, f_pad) \
+            if any(f.loss is not None for f in flows) else None
+        done = self._dispatch(False, fl, self._cap_ext(dtype), vol, dtype,
+                              loss)
         self.now = self._finish(flows, done)
         return self.now
 
@@ -357,7 +419,13 @@ class JaxFlowSim(LinkMap):
                       for i in batch]
             fl = np.stack([p[0] for p in packed])
             vol = np.stack([p[1] for p in packed])
-            return self._dispatch(True, fl, cap, vol, dtype)
+            loss = None
+            if any(f.loss is not None for i in batch for f in epochs[i]):
+                rows = [self._pack_loss(epochs[i], dtype, f_pad)
+                        for i in batch]
+                loss = tuple(np.stack([r[k] for r in rows])
+                             for k in range(4))
+            return self._dispatch(True, fl, cap, vol, dtype, loss)
 
         # batches solve sequentially: concurrent XLA compiles thrash on
         # small hosts (XLA's own compile parallelism saturates the

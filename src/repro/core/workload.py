@@ -205,6 +205,17 @@ class GroupOp:
     timed membership-change list making the op *dynamic* (native
     gleam bcast/write only — the overlay relays have no in-fabric
     membership to update).
+
+    ``loss_rate`` / ``ecn_backlog`` are the §5 loss/congestion
+    scenario parameters (Figs. 15/16), carried in the IR so a sweep
+    point is one serializable value: ``loss_rate`` is the per-hop
+    switch-egress drop probability; ``ecn_backlog`` the egress-queue
+    depth (bytes) beyond which packets are ECN-marked (DCQCN).
+    ``None`` defers to the engine-level setting.  The packet engine
+    applies them to the fabric (they are physical, hence global per
+    scenario — conflicting non-None values in one run are an error);
+    the flow engines fold them into the expected-value loss model
+    (``core/flowsim.py``).
     """
 
     op: str
@@ -216,6 +227,8 @@ class GroupOp:
     key: int = 0
     chunks: int = 8
     events: Tuple[MemberEvent, ...] = ()
+    loss_rate: Optional[float] = None
+    ecn_backlog: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(self, "members", tuple(self.members))
@@ -240,6 +253,12 @@ class GroupOp:
                              f"got {len(self.members)}")
         if self.source is not None and self.source not in self.members:
             raise ValueError(f"source {self.source!r} not in members")
+        if self.loss_rate is not None and not 0.0 <= self.loss_rate < 1.0:
+            raise ValueError(
+                f"loss_rate must be in [0, 1), got {self.loss_rate}")
+        if self.ecn_backlog is not None and self.ecn_backlog <= 0.0:
+            raise ValueError(
+                f"ecn_backlog must be positive bytes, got {self.ecn_backlog}")
         if self.events:
             self._check_events()
 

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.kernels.ref import maxmin_round_reference
+from repro.kernels.ref import loss_factors_reference, maxmin_round_reference
 
 try:  # pallas is optional at runtime: the ref path never imports it
     from jax.experimental import pallas as pl
@@ -212,3 +212,111 @@ def maxmin_rates(flow_links, cap, active, *, mode=None, block_f: int = 256):
             cap, jnp.int32(0))
     rates, _, _, _ = lax.while_loop(cond, body, init)
     return jnp.maximum(rates, 1e-9)
+
+
+# -------------------------------------------------- the loss-factor kernel
+
+def _loss_kernel(links_ref, rates_ref, active_ref, cap_ref, q_ref, wsq_ref,
+                 wnd_ref, ecn_ref, fac_out, util_s, cnt_s, *,
+                 dcqcn_num: float, dcqcn_min: float, util_eps: float):
+    """Grid (2, n_tiles): fused expected-value loss/DCQCN correction.
+
+    Phase 0 scatter-adds per-link utilization and active-flow counts
+    into VMEM scratch; phase 1 turns them into per-flow rate factors
+    (go-back-N goodput x DCQCN undershoot — the math documented on
+    ``ref.py:loss_factors_reference``) without materializing the hot-
+    link mask or any per-link intermediate in HBM.
+    """
+    phase = pl.program_id(0)
+    i = pl.program_id(1)
+    dtype = cap_ref.dtype
+
+    @pl.when((phase == 0) & (i == 0))
+    def _init():
+        util_s[...] = jnp.zeros_like(util_s)
+        cnt_s[...] = jnp.zeros_like(cnt_s)
+
+    @pl.when(phase == 0)
+    def _scatter():
+        act = active_ref[...]
+        util_s[...] = util_s[...].at[links_ref[...]].add(
+            jnp.broadcast_to((act * rates_ref[...])[:, None],
+                             links_ref.shape))
+        cnt_s[...] = cnt_s[...].at[links_ref[...]].add(
+            jnp.broadcast_to(act[:, None], links_ref.shape))
+
+    @pl.when(phase == 1)
+    def _factors():
+        hot = ((cnt_s[...] >= 2.0) &
+               (util_s[...] >= cap_ref[...] * (1.0 - util_eps))).astype(dtype)
+        flow_hot = jnp.max(hot[links_ref[...]], axis=1)
+        rates = rates_ref[...]
+        q = q_ref[...]
+        w = jnp.minimum(jnp.sqrt(jnp.maximum(rates * wsq_ref[...], 0.0)),
+                        wnd_ref[...])
+        gbn = (1.0 - q) / jnp.maximum(1.0 - q + q * w, 1e-30)
+        alpha = jnp.clip(dcqcn_num / jnp.maximum(rates, 1e-30), 0.0, 1.0)
+        dc = 1.0 - 0.25 * alpha * ecn_ref[...] * flow_hot
+        floor = jnp.minimum(dcqcn_min / jnp.maximum(rates, 1e-30), 1.0)
+        fac_out[...] = jnp.clip(gbn * jnp.maximum(dc, floor), 1e-9, 1.0)
+
+
+def loss_factors_pallas(flow_links, rates, active, cap, q, wsq, wnd, ecn, *,
+                        dcqcn_num: float, dcqcn_min: float,
+                        util_eps: float = 1e-3, block_f: int = 256,
+                        interpret: bool = False):
+    """Fused loss/DCQCN factors; pads F with zero (factor-1) sentinel rows."""
+    if not HAS_PALLAS:                          # pragma: no cover - gated
+        raise RuntimeError("pallas is not importable; use mode='ref'")
+    n_flows, n_hops = flow_links.shape
+    n_caps = cap.shape[0]
+    dtype = cap.dtype
+    tf = min(block_f, max(n_flows, 1))
+    pad = (-n_flows) % tf
+    if pad:
+        flow_links = jnp.concatenate(
+            [flow_links, jnp.full((pad, n_hops), n_caps - 1, jnp.int32)])
+        zeros = jnp.zeros(pad, dtype)
+        rates, active, q, wsq, wnd, ecn = (
+            jnp.concatenate([v, zeros])
+            for v in (rates, active, q, wsq, wnd, ecn))
+    f_pad = n_flows + pad
+    n_tiles = f_pad // tf
+
+    tile_spec = lambda: pl.BlockSpec((tf, n_hops), lambda p, i: (i, 0))
+    vec_spec = lambda: pl.BlockSpec((tf,), lambda p, i: (i,))
+    cap_spec = lambda: pl.BlockSpec((n_caps,), lambda p, i: (0,))
+
+    fac = pl.pallas_call(
+        functools.partial(_loss_kernel, dcqcn_num=dcqcn_num,
+                          dcqcn_min=dcqcn_min, util_eps=util_eps),
+        grid=(2, n_tiles),
+        in_specs=[tile_spec(), vec_spec(), vec_spec(), cap_spec(),
+                  vec_spec(), vec_spec(), vec_spec(), vec_spec()],
+        out_specs=vec_spec(),
+        out_shape=jax.ShapeDtypeStruct((f_pad,), dtype),
+        scratch_shapes=[pltpu.VMEM((n_caps,), dtype),    # link utilization
+                        pltpu.VMEM((n_caps,), dtype)],   # active-flow count
+        interpret=interpret,
+    )(flow_links, rates, active, cap, q, wsq, wnd, ecn)
+    return fac[:n_flows]
+
+
+def loss_factors(flow_links, rates, active, cap, q, wsq, wnd, ecn, *,
+                 dcqcn_num: float, dcqcn_min: float, mode=None,
+                 block_f: int = 256):
+    """Mode-dispatched loss/DCQCN rate factors, (F,) in (0, 1].
+
+    Same mode contract as ``maxmin_round`` (ref / pallas / interpret,
+    ``REPRO_MAXMIN`` override); the oracle lives in
+    ``ref.py:loss_factors_reference``.
+    """
+    mode = _resolve_mode(mode)
+    if mode == "ref":
+        return loss_factors_reference(flow_links, rates, active, cap, q,
+                                      wsq, wnd, ecn, dcqcn_num=dcqcn_num,
+                                      dcqcn_min=dcqcn_min)
+    return loss_factors_pallas(flow_links, rates, active, cap, q, wsq, wnd,
+                               ecn, dcqcn_num=dcqcn_num, dcqcn_min=dcqcn_min,
+                               block_f=block_f,
+                               interpret=(mode == "interpret"))

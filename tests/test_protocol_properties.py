@@ -163,6 +163,53 @@ def test_agg_min_tracks_bruteforce_under_churn_across_wrap(base, events):
     run_churn_case(base, events)
 
 
+# ------------- loss/DCQCN model invariants (drivers in _loss_props.py;
+# deterministic seeded-fuzz twins in test_loss_model.py)
+
+@settings(max_examples=20, **FAST)
+@given(group=st.integers(min_value=2, max_value=8),
+       transport=st.sampled_from(("gleam", "multiunicast", "ring")),
+       l1=st.floats(min_value=0.0, max_value=2e-2),
+       l2=st.floats(min_value=0.0, max_value=2e-2),
+       nbytes=st.integers(min_value=1 << 12, max_value=1 << 20))
+def test_flow_jct_monotone_nondecreasing_in_loss(group, transport, l1,
+                                                 l2, nbytes):
+    from _loss_props import run_monotone_case
+    run_monotone_case(group, transport, l1, l2, nbytes)
+
+
+@settings(max_examples=60, **FAST)
+@given(seed=st.integers(min_value=0, max_value=2 ** 32 - 1))
+def test_loss_factors_bounded_never_exceed_allocation(seed):
+    from _loss_props import run_factor_bounds_case
+    run_factor_bounds_case(seed)
+
+
+@settings(max_examples=120, **FAST)
+@given(base=st.integers(min_value=0, max_value=pk.PSN_MOD - 1),
+       n_pkts=st.integers(min_value=1, max_value=600),
+       window=st.sampled_from((4, 32, 256)),
+       plan=st.lists(st.tuples(
+           st.sampled_from(["ack", "nack", "timeout"]),
+           st.integers(min_value=0, max_value=700)),
+           min_size=1, max_size=60))
+def test_gbn_replay_bounded_by_window_across_wrap(base, n_pkts, window,
+                                                  plan):
+    from _loss_props import run_gbn_replay_case
+    run_gbn_replay_case(base, n_pkts, window, plan)
+
+
+@settings(max_examples=10, **FAST)
+@given(n_hosts=st.integers(min_value=3, max_value=10),
+       loss=st.floats(min_value=0.0, max_value=1e-2),
+       seed=st.integers(min_value=0, max_value=2 ** 16),
+       nbytes=st.integers(min_value=1 << 12, max_value=1 << 17))
+def test_e2e_retransmission_bounded_by_drops(n_hosts, loss, seed,
+                                             nbytes):
+    from _loss_props import run_e2e_retrans_case
+    run_e2e_retrans_case(n_hosts, loss, seed, nbytes)
+
+
 @settings(max_examples=60, **FAST)
 @given(a=st.integers(min_value=0, max_value=pk.PSN_MOD - 1),
        d=st.integers(min_value=0, max_value=(1 << 22) - 1))

@@ -17,6 +17,11 @@ topology/routing/jit caches:
   process against the now-warm directory (the steady state every run
   after the first sees).
 
+It also records a **loss-sweep** point: the fig15 flow sweep
+(calibration grid + fat-tree scale grid) through the loss-aware solver
+path, so a perf regression in ``loss_factors`` shows up next to the
+fig14 numbers.
+
 ``--engine packet`` times the packet engine's hot path on fig15 loss
 points (the fidelity regime only it can simulate):
 
@@ -158,6 +163,32 @@ def _child_flow(kind: str, scales) -> int:
         "compile_est_s": round(max(p1["wall_s"] - p2["wall_s"], 0.0), 4),
     }))
     return 0
+
+
+def _flow_loss_sweep(smoke: bool) -> dict:
+    """Flow-engine fig15 loss sweep — the regime the loss/DCQCN
+    correction added to the solver hot path.  Full mode runs both
+    sweep sections (calibration grid + 4096-host fat-tree scale grid);
+    smoke runs one lossy calibration point."""
+    from benchmarks import fig15_16_loss
+    from repro.core import flowsim_jax
+
+    flowsim_jax.reset_solve_stats()
+    rows: list = []
+    t0 = time.perf_counter()
+    if smoke:
+        jct = fig15_16_loss.flow_jct(8, 1e-3, "gleam")
+        rows.append(("fig15/diff_g8_loss1e-03/gleam_us", jct * 1e6, ""))
+    else:
+        fig15_16_loss.run(rows, engine="flow")
+    wall = time.perf_counter() - t0
+    stats = dict(flowsim_jax.SOLVE_STATS)
+    return {
+        "wall_s": round(wall, 4),
+        "solve_s": round(stats["solve_s"], 4),
+        "solve_calls": stats["calls"],
+        "rows": [[n, round(v, 4)] for n, v, _ in rows],
+    }
 
 
 # ---------------------------------------------- packet child measurement
@@ -321,6 +352,9 @@ def _main_flow(args, result: dict) -> None:
         # after, steady state: fresh process, warm cache dir
         result["after_warm"] = _run_child("batched", cache_env,
                                           scales=scales)
+        # loss-sweep point: fig15 on the flow engine (loss-aware solver)
+        result["loss_sweep"] = _run_child("flow-loss", cache_env,
+                                          spec={"smoke": args.smoke})
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
 
@@ -338,6 +372,10 @@ def _main_flow(args, result: dict) -> None:
         same = cold["pass1"]["solve_shapes"] == \
             warm["pass1"]["solve_shapes"]
         assert same, "bucketed shapes changed between processes"
+        loss = result["loss_sweep"]
+        assert loss["solve_calls"] > 0
+        assert loss["rows"] and all(v > 0 for _, v in loss["rows"]), \
+            "loss sweep produced no positive JCTs"
 
 
 def _main_packet(args, result: dict) -> None:
@@ -420,8 +458,9 @@ def main(argv=None) -> int:
                          "(ground-truth baseline)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--_child", default=None,
-                    choices=("batched", "serial", "packet-single",
-                             "packet-sweep"), help=argparse.SUPPRESS)
+                    choices=("batched", "serial", "flow-loss",
+                             "packet-single", "packet-sweep"),
+                    help=argparse.SUPPRESS)
     ap.add_argument("--_spec", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
@@ -429,6 +468,10 @@ def main(argv=None) -> int:
         scales = tuple(int(s) for s in args.scales.split(",")) \
             if args.scales else DEFAULT_SCALES
         return _child_flow(args._child, scales)
+    if args._child == "flow-loss":
+        print(json.dumps(_flow_loss_sweep(
+            json.loads(args._spec)["smoke"])))
+        return 0
     if args._child:
         return _child_packet(args._child, json.loads(args._spec))
 
