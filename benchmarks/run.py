@@ -53,6 +53,7 @@ MODULES = [
     "fig14_scale",           # Fig. 14 large-scale fat-tree JCT (fluid)
     "fig15_16_loss",         # Figs. 15-16 loss tolerance / goodput
     "fig_churn",             # membership churn: JCT + recovery time
+    "fig_faults",            # fault injection: recovery latency + JCT
     "collective_schedules",  # adapted layer: ICI schedule comparison
 ]
 

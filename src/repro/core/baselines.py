@@ -91,6 +91,13 @@ class _Bcast:
                 break
         return self.jct()
 
+    def repair_dead_relay(self, member: str, now: float) -> None:
+        """A receiver went dark (detected): stop waiting for it.  The
+        relay subclasses also splice the schedule around the hole."""
+        if member in self.members and member != self.source:
+            self.members.remove(member)
+            self.t_deliver.pop(member, None)
+
 
 class MultiUnicastBcast(_Bcast):
     """Fig. 2a: n-1 serialized copies through the sender's link."""
@@ -126,6 +133,7 @@ class _RelayBcast(_Bcast):
         super().__init__(net, members)
         self.chunks = max(1, chunks)
         self.relay_overhead = relay_overhead
+        self._qp_kw = dict(qp_kw)                      # for repair re-wiring
         self.edges = self._edges()                     # (parent, child)
         self.children: Dict[str, List[str]] = {}
         for a, b in self.edges:
@@ -168,6 +176,37 @@ class _RelayBcast(_Bcast):
             for k in range(self.chunks):
                 qp.submit(self.chunk_bytes, sim.now, msg_id=k)
         sim.kick(sim.hosts[self.source], sim.now)
+
+    def repair_dead_relay(self, member: str, now: float) -> None:
+        """Splice the relay schedule around a dark relay: its children
+        re-parent onto ITS parent (ring: the chain re-links; tree: the
+        grandparent adopts), fresh QPs are wired for the new edges, and
+        the full chunk stream is resubmitted on each — a software relay
+        keeps no per-child progress state, so conservative full
+        resubmission is the overlay's go-back-N.  The chunk counter
+        counts duplicates as progress (a child that already held k
+        chunks delivers after ``chunks - k`` repaired arrivals), which
+        is the same first-order bookkeeping the flow engine's repaired-
+        schedule model applies analytically."""
+        if member not in self.members or member == self.source:
+            return
+        sim = self.net.sim
+        kids = self.children.pop(member, [])
+        parent = next((a for a, b in self.edges if b == member),
+                      self.source)
+        super().repair_dead_relay(member, now)
+        self.edges = [(a, b) for a, b in self.edges
+                      if a != member and b != member]
+        for c in kids:
+            self.edges.append((parent, c))
+            self.children.setdefault(parent, []).append(c)
+            qa, qb = self.net.unicast_qp(parent, c, **self._qp_kw)
+            self.qp_out[(parent, c)] = qa
+            qb.on_deliver = self._mk_deliver(c)
+            for k in range(self.chunks):
+                qa.submit(self.chunk_bytes, now, msg_id=k)
+        if kids:
+            sim.kick(sim.hosts[parent], now)
 
 
 class RingBcast(_RelayBcast):

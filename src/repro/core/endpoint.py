@@ -73,8 +73,10 @@ class QP:
     def __init__(self, qpn: int, ip: int, dst_ip: int, dst_qpn: int, *,
                  link_bw: float, window: int = 256, mtu: int = pk.MTU,
                  ack_freq: int = 4, rto: float = 200e-6,
+                 max_retries: Optional[int] = None,
                  on_complete: Optional[Callable] = None,
-                 on_deliver: Optional[Callable] = None):
+                 on_deliver: Optional[Callable] = None,
+                 on_error: Optional[Callable] = None):
         self.qpn = qpn
         self.ip = ip
         self.dst_ip = dst_ip
@@ -86,11 +88,21 @@ class QP:
         # liveness: a failed member's QP goes dead (deactivate) — the
         # NIC drops its traffic and the sender side leaves the ready set
         self.alive = True
+        # bounded-retry semantics (fault plane): with ``max_retries`` set,
+        # each consecutive RTO without forward progress doubles the next
+        # deadline (capped 64x) and counts against the budget; at the cap
+        # the QP enters a terminal error state instead of retransmitting
+        # forever.  ``None`` keeps the legacy retransmit-forever behaviour
+        # bit-identically (non-fault scenarios never pay for this).
+        self.max_retries = max_retries
+        self.retries = 0                    # consecutive unproductive RTOs
+        self.error = ""                     # terminal error reason, "" = ok
         # mid-stream (re)attach marker: adopt the live stream's PSN at
         # the next DATA packet instead of NACKing from a stale rqPSN
         self.sync_next_psn = False
         self.on_complete = on_complete      # (msg, now) sender CQE
         self.on_deliver = on_deliver        # (msg_id, now) receiver done
+        self.on_error = on_error            # (qp, reason, now) terminal
         # ---- NIC ready-set plumbing (set by packetsim.Host.add_qp):
         # the owning host keeps a set of QPs with sender-side work so its
         # emission loop never rescans idle connections; every transition
@@ -163,6 +175,8 @@ class QP:
     def next_packet(self, now: float) -> Tuple[Optional[pk.Packet], float]:
         """The NIC asks for the next data packet.  Returns (packet or None,
         earliest time anything could become ready)."""
+        if not self.alive:
+            return None, INF                       # dead/errored QP
         self.rate.maybe_increase(now)
         psn = self.snd_nxt
         if psn == self.sq_psn:
@@ -193,6 +207,7 @@ class QP:
         old = self.snd_una
         if una == old or (una - old) % M >= W:     # not psn_gt(una, old)
             return
+        self.retries = 0                    # forward progress: reset budget
         self.snd_una = una
         nxt = self.snd_nxt
         if una != nxt and (una - nxt) % M < W:
@@ -221,6 +236,7 @@ class QP:
         if pk.psn_gt(self.snd_nxt, epsn):
             self.retransmitted += pk.psn_sub(self.snd_nxt, epsn)
             self.snd_nxt = epsn
+        self.retries = 0        # a NACK proves the path + peer are live
         self.timer_deadline = now + self.rto
         self._ready_sync()
 
@@ -231,10 +247,35 @@ class QP:
         if self.snd_una == self.sq_psn:
             self.timer_deadline = INF
             return
+        if self.max_retries is not None:
+            self.retries += 1
+            if self.retries > self.max_retries:
+                self._enter_error("retry_exceeded", now)
+                return
+            # exponential backoff, capped so a flapped link is re-probed
+            # on a sane cadence rather than once an hour
+            self.retransmitted += pk.psn_sub(self.snd_nxt, self.snd_una)
+            self.snd_nxt = self.snd_una
+            self.timer_deadline = now + self.rto * min(2 ** self.retries, 64)
+            self._ready_sync()
+            return
         self.retransmitted += pk.psn_sub(self.snd_nxt, self.snd_una)
         self.snd_nxt = self.snd_una
         self.timer_deadline = now + self.rto
         self._ready_sync()
+
+    def _enter_error(self, reason: str, now: float) -> None:
+        """Terminal: retry budget exhausted.  The QP leaves service like
+        ``deactivate`` but keeps the attributable reason — every fault
+        ends in measured recovery or an explicit error, never a hang."""
+        if self.error:
+            return
+        self.error = reason
+        self.alive = False
+        self.timer_deadline = INF
+        self._ready_sync()
+        if self.on_error:
+            self.on_error(self, reason, now)
 
     # ----------------------------------------------------------- receiver
 

@@ -244,6 +244,8 @@ class PacketEngine(_WorkloadStaging):
         # (record, n deliveries to wait for, completion policy or None)
         self._pending: List[Tuple[MsgRecord, int, Optional[Callable]]] = []
         self._op_phys: Dict[str, float] = {}    # op-level fabric overrides
+        self.last_run_stats: List = []
+        self.last_run_errors: List[str] = []    # run_many degradations
 
     # ------------------------------------------------------------ helpers
 
@@ -309,7 +311,7 @@ class PacketEngine(_WorkloadStaging):
     # ----------------------------------------------------------- lowering
 
     def _stage_native(self, op: GroupOp) -> MsgRecord:
-        if op.events:
+        if op.events or op.faults:
             return self._stage_dynamic(op)
         if op.op == "write":
             return self._stage_group_op(
@@ -332,12 +334,28 @@ class PacketEngine(_WorkloadStaging):
         join point but are not required to complete the in-flight
         message), which keeps ``run_many``'s quiesce/fork machinery
         working unchanged — events are scheduled relative to the
-        submission instant inside the deferred thunk."""
-        g = self.net.multicast_group(list(op.members), **self.group_kw)
+        submission instant inside the deferred thunk.
+
+        ``FaultEvent``s lower the same way: each fault is a scheduled
+        callback driving the group's self-healing ops (link/switch
+        repair re-floods, switch-originated teardown confirm,
+        master re-election — ``core/gleam.py``).  Fault scenarios get
+        the RoCE-style bounded retry budget by default (an unreachable
+        peer must surface as a QP error, never a hang); zero-fault ops
+        keep ``max_retries=None`` so their records stay bit-identical
+        to the pre-fault-plane tree."""
+        from repro.core.faults import DEFAULT_FAULT_RETRIES, \
+            validate_fault_plan
+        kw = dict(self.group_kw)
+        if op.faults:
+            validate_fault_plan(self.topo, op)
+            kw.setdefault("max_retries", DEFAULT_FAULT_RETRIES)
+        g = self.net.multicast_group(list(op.members), **kw)
         g.register()
         sim = self.net.sim
         rec = MsgRecord(-1, op.nbytes, sim.now)
         events = op.sorted_events()
+        faults = op.sorted_faults()
 
         def thunk():
             if op.source is not None and op.source != g.source:
@@ -355,6 +373,21 @@ class PacketEngine(_WorkloadStaging):
                 sim.schedule(t0 + ev.at,
                              lambda now, fn=ops[ev.kind], m=ev.member:
                              fn(m, now=now))
+            fops = {
+                "link_down": lambda now, f:
+                    g.link_fault(f.node, f.peer, now=now),
+                "link_flap": lambda now, f:
+                    g.link_fault(f.node, f.peer, now=now,
+                                 duration=f.duration),
+                "switch_fail": lambda now, f:
+                    g.switch_fault(f.node, now=now),
+                "host_gone_dark": lambda now, f:
+                    g.host_gone_dark(f.node, now=now),
+                "master_crash": lambda now, f: g.master_crash(now=now),
+            }
+            for f in faults:
+                sim.schedule(t0 + f.at,
+                             lambda now, fn=fops[f.kind], f=f: fn(now, f))
 
         self._staged.append(thunk)
         self._pending.append((rec, len(op.surviving_receivers()), None))
@@ -362,19 +395,44 @@ class PacketEngine(_WorkloadStaging):
 
     def _stage_overlay(self, op: GroupOp, transport: Transport) -> MsgRecord:
         """Relay transports run the ``baselines.py`` machinery: QPs are
-        wired at stage time (silent), data submission is deferred."""
+        wired at stage time (silent), data submission is deferred.
+
+        Overlay fault plans (the IR admits only ``host_gone_dark`` on
+        overlays — fabric and master faults are native-transport
+        concepts) lower to a scheduled NIC blackout plus, one
+        ``fail_detect`` later, the relay-schedule splice
+        (``repair_dead_relay``: the dead relay's children re-parent and
+        the chunk stream is resubmitted)."""
         members = op.ordered_members()
-        b = transport.packet_bcast(self.net, members, op.chunks,
-                                   **self.relay_kw)
+        kw = dict(self.relay_kw)
+        if op.faults:
+            from repro.core.faults import DEFAULT_FAULT_RETRIES, \
+                validate_fault_plan
+            validate_fault_plan(self.topo, op)
+            kw.setdefault("max_retries", DEFAULT_FAULT_RETRIES)
+        b = transport.packet_bcast(self.net, members, op.chunks, **kw)
         rec = MsgRecord(-1, op.nbytes, self.net.sim.now)
         b.t_deliver = rec.t_deliver             # deliveries land on rec
+        sim = self.net.sim
 
         def thunk():
-            rec.t_submit = self.net.sim.now
+            rec.t_submit = sim.now
             b.start(op.nbytes)
+            if op.faults:
+                from repro.core.gleam import DEFAULT_FAIL_DETECT
+                detect = float(self.group_kw.get("fail_detect",
+                                                 DEFAULT_FAIL_DETECT))
+                t0 = sim.now
+                for f in op.sorted_faults():
+                    sim.schedule(t0 + f.at,
+                                 lambda now, m=f.node: sim.host_dark(m))
+                    sim.schedule(t0 + f.at + detect,
+                                 lambda now, m=f.node:
+                                 b.repair_dead_relay(m, now))
 
         self._staged.append(thunk)
-        self._pending.append((rec, b.n_receivers(), _cqe_from_deliveries))
+        n = len(op.surviving_receivers()) if op.faults else b.n_receivers()
+        self._pending.append((rec, n, _cqe_from_deliveries))
         return rec
 
     def _stage_allreduce(self, op: GroupOp, transport: Transport
@@ -475,6 +533,9 @@ class PacketEngine(_WorkloadStaging):
                 if fin is not None and len(r.t_deliver) >= n \
                         and r.t_sender_cqe < 0:
                     fin(r)
+                if r.error:
+                    continue            # bounded-retry terminal error:
+                                        # the op is complete, not stuck
                 if len(r.t_deliver) < n or r.t_sender_cqe < 0:
                     still.append((r, n, fin))
             self._pending = still
@@ -503,6 +564,8 @@ class PacketEngine(_WorkloadStaging):
         sim._q.clear()
         sim.now = 0.0
         sim.reset_free()
+        sim.clear_faults()      # restore links/hosts a fault scenario took
+                                # down (no-op unless a fault ever fired)
         for host in sim.hosts.values():
             host._kick_t = math.inf
             for qp in host.qps.values():
@@ -598,82 +661,121 @@ class PacketEngine(_WorkloadStaging):
             ends.append(end)
             stats.append(st)
         self.last_run_stats = stats
+        self.last_run_errors: List[str] = []
         return ends
+
+    def _restore_records(self, pending: List, rec_times: List) -> None:
+        """Back-fill a scenario's caller-held records from a worker's
+        shipped completion times."""
+        for (rec, _, _), (mid, t_sub, t_cqe, deliver, err) in zip(
+                pending, rec_times):
+            rec.msg_id = mid
+            rec.t_submit = t_sub
+            rec.t_sender_cqe = t_cqe
+            rec.t_deliver.clear()
+            rec.t_deliver.update(deliver)
+            rec.error = err
 
     def _run_many_parallel(self, metas: List[Tuple[List, List]],
                            timeout: float, workers: int) -> List[float]:
         """Fork-based scenario parallelism (quiesce makes scenarios
         independent experiments, so they partition freely).  Each child
         inherits the fully-staged engine copy-on-write, drives scenarios
-        ``w, w+workers, ...`` exactly like the serial path, and pickles
-        back per-record completion times plus counter deltas; the parent
-        back-fills the caller's records and folds the deltas into its
-        own (never-driven) simulator counters."""
+        ``w, w+workers, ...`` exactly like the serial path, and STREAMS
+        one pickle frame per scenario back up the pipe (record
+        completion times + counter deltas); the parent back-fills the
+        caller's records and folds the deltas into its own
+        (never-driven) simulator counters.
+
+        Degradation is graceful and per-scenario: a scenario that
+        raises in a worker is reported by index (frame tag ``"err"``)
+        and the rest of that worker's share keeps running; a worker
+        that dies outright (OOM kill, segfault, truncated frame) just
+        stops producing frames.  Every scenario that did not come back
+        clean is re-run serially in the parent — same
+        ``_run_scenario``, same per-index reseed, so the results stay
+        bit-identical to the serial path and a deterministic scenario
+        error reproduces with a real traceback instead of an opaque
+        EOF.  ``last_run_errors`` records what degraded and why."""
         children = []
         for w in range(workers):
             r_fd, w_fd = os.pipe()
             pid = os.fork()
             if pid == 0:                                  # ---- child
-                status = 1
                 try:
                     os.close(r_fd)
-                    out = []
-                    for i in range(w, len(metas), workers):
-                        staged, pending = metas[i]
-                        end, st = self._run_scenario(i, staged, pending,
-                                                     timeout)
-                        out.append((i, end, st,
-                                    [(r.msg_id, r.t_submit, r.t_sender_cqe,
-                                      dict(r.t_deliver))
-                                     for r, _, _ in pending]))
-                    blob = pickle.dumps(("ok", out),
-                                        protocol=pickle.HIGHEST_PROTOCOL)
                     with os.fdopen(w_fd, "wb") as fh:
-                        fh.write(blob)
-                    status = 0
+                        for i in range(w, len(metas), workers):
+                            staged, pending = metas[i]
+                            try:
+                                end, st = self._run_scenario(
+                                    i, staged, pending, timeout)
+                                frame = ("ok", i, end, st,
+                                         [(r.msg_id, r.t_submit,
+                                           r.t_sender_cqe,
+                                           dict(r.t_deliver), r.error)
+                                          for r, _, _ in pending])
+                            except BaseException:
+                                frame = ("err", i, traceback.format_exc())
+                            pickle.dump(frame, fh,
+                                        protocol=pickle.HIGHEST_PROTOCOL)
+                            fh.flush()
                 except BaseException:
-                    try:
-                        blob = pickle.dumps(
-                            ("err", traceback.format_exc()))
-                        with os.fdopen(w_fd, "wb") as fh:
-                            fh.write(blob)
-                    except BaseException:
-                        pass
+                    pass
                 finally:
-                    os._exit(status)
+                    os._exit(0)
             os.close(w_fd)                                # ---- parent
-            children.append((pid, r_fd))
+            children.append((pid, r_fd, w))
         sim = self.net.sim
         ends = [0.0] * len(metas)
         stats: List[Optional[Dict[str, int]]] = [None] * len(metas)
-        errors = []
-        for pid, r_fd in children:
+        reported: set = set()
+        errors: List[str] = []
+        failed: List[int] = []
+        for pid, r_fd, w in children:
+            expected = list(range(w, len(metas), workers))
             with os.fdopen(r_fd, "rb") as fh:
-                blob = fh.read()
+                while True:
+                    try:
+                        frame = pickle.load(fh)
+                    except EOFError:
+                        break               # clean end of stream
+                    except Exception:
+                        break               # truncated frame: child died
+                    if frame[0] == "err":
+                        _, i, tb = frame
+                        reported.add(i)
+                        failed.append(i)
+                        errors.append(
+                            f"scenario {i} raised in worker {w}:\n{tb}")
+                        continue
+                    _, i, end, st, rec_times = frame
+                    reported.add(i)
+                    ends[i] = end
+                    stats[i] = st
+                    self._restore_records(metas[i][1], rec_times)
+                    sim.events += st["events"]
+                    sim.dropped += st["dropped"]
+                    sim.tx_bytes += st["tx_bytes"]
             os.waitpid(pid, 0)
-            if not blob:
-                errors.append(f"worker {pid} died without reporting")
-                continue
-            tag, payload = pickle.loads(blob)
-            if tag == "err":
-                errors.append(payload)
-                continue
-            for i, end, st, rec_times in payload:
+            lost = [i for i in expected if i not in reported]
+            if lost:
+                errors.append(
+                    f"worker {w} (pid {pid}) died before reporting "
+                    f"scenarios {lost}")
+        retry = sorted(set(failed)
+                       | {i for i in range(len(metas)) if i not in reported})
+        self.last_run_errors = errors
+        if retry:
+            warnings.warn(
+                f"parallel run_many degraded: re-running scenarios "
+                f"{retry} serially ({len(errors)} worker report(s) — "
+                f"see last_run_errors)", RuntimeWarning)
+            for i in retry:
+                staged, pending = metas[i]
+                end, st = self._run_scenario(i, staged, pending, timeout)
                 ends[i] = end
                 stats[i] = st
-                for (rec, _, _), (mid, t_sub, t_cqe, deliver) in zip(
-                        metas[i][1], rec_times):
-                    rec.msg_id = mid
-                    rec.t_submit = t_sub
-                    rec.t_sender_cqe = t_cqe
-                    rec.t_deliver.clear()
-                    rec.t_deliver.update(deliver)
-                sim.events += st["events"]
-                sim.dropped += st["dropped"]
-                sim.tx_bytes += st["tx_bytes"]
-        if errors:
-            raise RuntimeError("parallel run_many worker failed:\n"
-                               + "\n".join(errors))
         self.last_run_stats = stats
         return ends
 
@@ -781,6 +883,43 @@ class FlowEngine(_WorkloadStaging):
                 (prop + sf, prop)
         return memo
 
+    def _fault_paths(self, src: str, members: Sequence[str], key: int,
+                     downs: Sequence[Tuple[str, str]], seg_wire: int,
+                     targets) -> Tuple[tuple, Dict[str, tuple]]:
+        """(tree links, latency map) re-derived with ``downs`` applied.
+
+        Bypasses the LinkMap memos (they cache pristine-topology paths
+        only): temporarily marks the downed links in the topology, walks
+        ``path_links`` per target, and restores.  Targets unroutable
+        around the faults are skipped — their branch is simply gone.
+        Tree links come from *present* members only; latencies cover
+        every target so later steps (joins, prunes) can consult them.
+        """
+        sim = self._sim
+        topo = self.topo
+        links: set = set()
+        lat: Dict[str, tuple] = {}
+        present = set(members)
+        try:
+            for a, b in downs:
+                topo.set_link_down(a, b, True)
+            for m in sorted(targets):
+                if m == src:
+                    continue
+                try:
+                    ids = tuple(sim.link_id[hop]
+                                for hop in topo.path_links(src, m, key))
+                except (KeyError, ValueError):
+                    continue            # unroutable while down
+                if m in present:
+                    links.update(ids)
+                prop = float(sum(sim.delay[i] for i in ids))
+                sf = float(sum(seg_wire / sim.cap[i] for i in ids[1:]))
+                lat[m] = (prop + sf, prop)
+        finally:
+            topo.clear_down()
+        return tuple(sorted(links)), lat
+
     # --------------------------------------------------------- loss model
 
     def _loss_params(self, links, *, nbytes: int, rtt: float, tuning: dict,
@@ -855,7 +994,7 @@ class FlowEngine(_WorkloadStaging):
         return self._stage(links, volume, rec, deliver, back, loss)
 
     def _stage_native(self, op: GroupOp) -> MsgRecord:
-        if op.events:
+        if op.events or op.faults:
             return self._stage_dynamic(op)
         volume = float(wire_bytes(op.nbytes))
         if op.op == "write" and not op.same_mr:
@@ -892,7 +1031,33 @@ class FlowEngine(_WorkloadStaging):
         first order).  Receivers present at completion deliver at
         completion + path latency (joiners included, matching the
         packet engine's last-packet delivery); members that left or
-        failed earlier do not deliver."""
+        failed earlier do not deliver.
+
+        ``FaultEvent``s extend the same piecewise machinery with a
+        detect+repair stall model (the fluid image of the packet
+        engine's self-healing recovery):
+
+        - link_down / link_flap / switch_fail — progress stops at the
+          fault and resumes, on the tree re-derived over the surviving
+          paths, at ``at + max(rto, link_detect + 2*repair_prop)``:
+          the sender wedges on the dead branch until either its RTO
+          go-back-N replay or the leaf-detect + repair-envelope
+          round-trip un-wedges it, whichever the packet engine's
+          timeline reaches first.  No drain credit — the repaired
+          branch is resent from ``snd_una``.  A flap's repaired tree
+          persists after the link heals, exactly as the packet
+          engine's repaired installs do.
+        - host_gone_dark — the ``fail`` drain model (live receivers
+          keep their windowed bytes) with the sender CQE floored at
+          ``at + link_detect + prune_prop``, the switch-originated
+          teardown-confirm's arrival at the master.
+        - master_crash — progress stops at the crash; the lowest-rank
+          survivor resumes the remaining volume from its OWN root at
+          ``at + fail_detect`` (re-election), on the tree re-rooted at
+          the survivor; deliveries and the return path are measured
+          from the new source."""
+        from repro.core.faults import DEFAULT_LINK_DETECT, \
+            validate_fault_plan
         from repro.core.gleam import DEFAULT_FAIL_DETECT
         members = list(op.members)
         source = op.source or members[0]
@@ -903,6 +1068,9 @@ class FlowEngine(_WorkloadStaging):
         key = op.key
         fail_detect = float(self.group_kw.get("fail_detect",
                                               DEFAULT_FAIL_DETECT))
+        link_detect = float(self.group_kw.get("link_detect",
+                                              DEFAULT_LINK_DETECT))
+        rto = float(self.group_kw.get("rto", 200e-6))
 
         def mincap(links) -> float:
             if not links:                   # no receivers left
@@ -912,24 +1080,105 @@ class FlowEngine(_WorkloadStaging):
         links0 = sim.multicast_tree_links(source, members, key)
         cap0 = float(min(sim.cap[i] for i in links0))
         events = op.sorted_events()
+        seg = wire_bytes(min(op.nbytes, pk.MTU))
         # membership timeline -> typed steps carrying the segment's
-        # tree: ("cap", at, tree) for join/leave, ("fail", at,
-        # tree_after_isolation) for fails
+        # tree: ("cap", at, tree, extra) for join/leave, ("fail", ...)
+        # for member fails, ("stall", ...) / ("dark", ...) for faults;
+        # ``extra`` is None on the event-only path (bit-identical to
+        # the pre-fault tree) and a dict carrying the step's resume
+        # time / CQE floor, post-fault latency map, and source.
         present = list(members)
-        steps: List[Tuple[str, float, tuple]] = []
-        for ev in events:
-            if ev.kind == "join":
-                present.append(ev.member)
-                steps.append(("cap", ev.at,
-                              sim.multicast_tree_links(source, present,
-                                                       key)))
-            elif ev.kind in ("leave", "fail"):
-                present.remove(ev.member)
-                steps.append((("fail" if ev.kind == "fail" else "cap"),
-                              ev.at,
-                              sim.multicast_tree_links(source, present,
-                                                       key)))
-            # master-switch: no effect on the in-flight message
+        steps: List[tuple] = []
+        if op.faults:
+            validate_fault_plan(self.topo, op)
+            lat_targets = set(members) | {e.member for e in events
+                                          if e.kind == "join"}
+            downs: List[Tuple[str, str]] = []
+            cur_src = source
+            lat_cur = {m: self._path_latency(cur_src, m, seg, key)
+                       for m in lat_targets if m != cur_src}
+            merged = sorted(
+                [(e.at, 0, e) for e in events]
+                + [(f.at, 1, f) for f in op.sorted_faults()],
+                key=lambda x: (x[0], x[1]))
+            for at, is_fault, ev in merged:
+                if not is_fault:
+                    if ev.kind == "join":
+                        present.append(ev.member)
+                    elif ev.kind in ("leave", "fail"):
+                        present.remove(ev.member)
+                    # master-switch: no effect on the in-flight message
+                    if ev.kind == "master-switch":
+                        continue
+                    links_next, lat_cur = self._fault_paths(
+                        cur_src, present, key, downs, seg, lat_targets)
+                    steps.append((("fail" if ev.kind == "fail"
+                                   else "cap"), at, links_next,
+                                  {"lat": lat_cur, "src": cur_src}))
+                    continue
+                if ev.kind in ("link_down", "link_flap"):
+                    new_downs = [(ev.node, ev.peer)]
+                elif ev.kind == "switch_fail":
+                    new_downs = [(ev.node, peer) for _, (peer, _)
+                                 in sorted(self.topo.ports[ev.node].items())]
+                if ev.kind in ("link_down", "link_flap", "switch_fail"):
+                    # a fault on links the live tree never used loses no
+                    # data: the repair re-floods installs, but the
+                    # stream never stalls (the packet engine's reuse
+                    # path keeps the tree as-is) — lower it as a plain
+                    # tree recompute, not a stall
+                    cur_links = set(steps[-1][2] if steps else links0)
+                    hit = False
+                    for a, b in new_downs:
+                        pa, pb = self.topo._link_ports(a, b)
+                        if sim.link_id.get((a, pa)) in cur_links or \
+                                sim.link_id.get((b, pb)) in cur_links:
+                            hit = True
+                            break
+                    downs.extend(new_downs)
+                    links_next, lat_cur = self._fault_paths(
+                        cur_src, present, key, downs, seg, lat_targets)
+                    if not hit:
+                        steps.append(("cap", at, links_next,
+                                      {"lat": lat_cur, "src": cur_src}))
+                        continue
+                    rep = max((lat_cur[m][1] for m in present
+                               if m != cur_src and m in lat_cur),
+                              default=0.0)
+                    resume = at + max(rto, link_detect + 2.0 * rep)
+                    steps.append(("stall", at, links_next,
+                                  {"resume": resume, "lat": lat_cur,
+                                   "src": cur_src}))
+                elif ev.kind == "host_gone_dark":
+                    prune = lat_cur.get(ev.node, (0.0, 0.0))[1]
+                    present.remove(ev.node)
+                    links_next, lat_cur = self._fault_paths(
+                        cur_src, present, key, downs, seg, lat_targets)
+                    steps.append(("dark", at, links_next,
+                                  {"floor": at + link_detect + prune,
+                                   "lat": lat_cur, "src": cur_src}))
+                else:                       # master_crash
+                    present.remove(cur_src)
+                    cur_src = present[0]    # lowest-rank survivor
+                    links_next, lat_cur = self._fault_paths(
+                        cur_src, present, key, downs, seg, lat_targets)
+                    steps.append(("stall", at, links_next,
+                                  {"resume": at + fail_detect,
+                                   "lat": lat_cur, "src": cur_src}))
+        else:
+            for ev in events:
+                if ev.kind == "join":
+                    present.append(ev.member)
+                    steps.append(("cap", ev.at,
+                                  sim.multicast_tree_links(source, present,
+                                                           key), None))
+                elif ev.kind in ("leave", "fail"):
+                    present.remove(ev.member)
+                    steps.append((("fail" if ev.kind == "fail" else "cap"),
+                                  ev.at,
+                                  sim.multicast_tree_links(source, present,
+                                                           key), None))
+                # master-switch: no effect on the in-flight message
         # go-back-N window in wire bytes: what the sender can still push
         # past a frozen cumulative ACK before it wedges
         window_wire = float(self.group_kw.get("window", 256)
@@ -946,7 +1195,7 @@ class FlowEngine(_WorkloadStaging):
                                  tuning=self.group_kw, op=op)
         self._stage(links0, volume, hidden, {}, 0.0, loss)
         self._dyn_links[id(hidden)] = \
-            [(0.0, links0)] + [(at, ls) for _, at, ls in steps]
+            [(0.0, links0)] + [(at, ls) for _, at, ls, _ in steps]
 
         def other_links_at(t_rel: float) -> List[tuple]:
             """Link sets every OTHER flow of the scenario occupies at
@@ -983,7 +1232,10 @@ class FlowEngine(_WorkloadStaging):
             r0 = volume / (hidden.t_sender_cqe - t0)
             fair0 = fair(links0, 0.0)
             remaining, t_rel, fair_now = volume, 0.0, fair0
-            for kind, at, links_next in steps + [("cap", math.inf, links0)]:
+            cqe_floor = 0.0                 # fault recovery lower bound
+            lat_now, src_now = latency, source
+            for kind, at, links_next, extra in \
+                    steps + [("cap", math.inf, links0, None)]:
                 rate = r0 * (fair_now / fair0)
                 if at > t_rel:
                     if remaining <= rate * (at - t_rel):
@@ -992,9 +1244,13 @@ class FlowEngine(_WorkloadStaging):
                         break
                     remaining -= rate * (at - t_rel)
                     t_rel = at
-                if kind == "fail":
+                if kind in ("fail", "dark"):
                     # the in-flight window drains to the live receivers
                     # at the pre-fail rate ...
+                    if kind == "dark":
+                        # ... but the CQE cannot beat the switch's
+                        # teardown-confirm reaching the master
+                        cqe_floor = max(cqe_floor, extra["floor"])
                     drain = min(remaining, window_wire)
                     if drain >= remaining:
                         t_rel += remaining / rate
@@ -1002,25 +1258,50 @@ class FlowEngine(_WorkloadStaging):
                         break
                     remaining -= drain
                     # ... then the sender wedges until isolation
-                    t_rel = max(t_rel + drain / rate, at + fail_detect)
+                    floor = (extra["floor"] if kind == "dark"
+                             else at + fail_detect)
+                    t_rel = max(t_rel + drain / rate, floor)
+                elif kind == "stall":
+                    # fabric fault / master crash: no drain credit (the
+                    # repaired branch is resent go-back-N), progress
+                    # resumes on the repaired tree at detect+repair
+                    t_rel = max(t_rel, extra["resume"])
+                    cqe_floor = max(cqe_floor, extra["resume"])
+                if extra is not None:
+                    lat_now, src_now = extra["lat"], extra["src"]
                 fair_now = fair(links_next, at)
             done = t0 + t_rel
-            receivers = set(members)
-            for ev in events:               # membership at completion
-                if ev.at > t_rel:
-                    break
-                if ev.kind == "join":
-                    receivers.add(ev.member)
-                elif ev.kind in ("leave", "fail"):
-                    receivers.discard(ev.member)
-            receivers.discard(source)
+            if op.faults:
+                # replay the merged timeline up to completion; members
+                # that went dark or ever held the source role are excused
+                excused = {source}
+                receivers = set(members)
+                for at, snap_present, snap_src in \
+                        op.fault_roles()["snaps"]:
+                    if at > t_rel:
+                        break
+                    receivers = set(snap_present)
+                    excused.add(snap_src)
+                receivers -= excused
+            else:
+                receivers = set(members)
+                for ev in events:           # membership at completion
+                    if ev.at > t_rel:
+                        break
+                    if ev.kind == "join":
+                        receivers.add(ev.member)
+                    elif ev.kind in ("leave", "fail"):
+                        receivers.discard(ev.member)
+                receivers.discard(source)
             back = 0.0
             for m in receivers:
-                lat, prop = latency[m]
+                lat, prop = lat_now[m]
                 rec.t_deliver[m] = done + lat
                 back = max(back, prop)
             rec.t_sender_cqe = (max(rec.t_deliver.values()) + back
                                 if receivers else done)
+            if cqe_floor > 0.0:
+                rec.t_sender_cqe = max(rec.t_sender_cqe, t0 + cqe_floor)
             return rec.t_sender_cqe
 
         self._post.append(fin)
@@ -1056,13 +1337,21 @@ class FlowEngine(_WorkloadStaging):
                         {child: lat}, prop, loss)
             comp.append((child, hidden, lat, prop))
 
+        # only host_gone_dark reaches an overlay transport (the IR
+        # validator routes fabric/master faults to native lowerings)
+        darks = op.sorted_faults() if op.faults else []
+
         if not transport.chunked:               # multiunicast: direct flows
+            dead = {f.node for f in darks}
+
             def fin(t0: float) -> float:
                 for child, hidden, lat, prop in comp:
-                    rec.t_deliver[child] = hidden.t_deliver[child]
+                    if child not in dead:
+                        rec.t_deliver[child] = hidden.t_deliver[child]
                 rec.t_sender_cqe = max(
                     hidden.t_deliver[child] + prop
-                    for child, hidden, lat, prop in comp)
+                    for child, hidden, lat, prop in comp
+                    if child not in dead)
                 return rec.t_sender_cqe
         else:
             # cumulative path latency source -> member along the relay
@@ -1081,11 +1370,60 @@ class FlowEngine(_WorkloadStaging):
                     rec.t_deliver[child] = t0 + \
                         (chunks - 1 + hops) * ser + cum[child] + \
                         (hops - 1) * overhead
+                if darks:
+                    self._overlay_repair(op, rec, t0, ser, darks,
+                                         parent_of, lat_edge, chunks,
+                                         overhead, seg)
                 rec.t_sender_cqe = max(rec.t_deliver.values()) + back
                 return rec.t_sender_cqe
 
         self._post.append(fin)
         return rec
+
+    def _overlay_repair(self, op: GroupOp, rec: MsgRecord, t0: float,
+                        ser: float, faults, parent_of, lat_edge,
+                        chunks: int, overhead: float, seg: int) -> None:
+        """Analytic image of the packet relays' dark-relay splice.
+
+        At ``at + fail_detect`` the dead relay's children re-parent onto
+        ITS parent over fresh edges and the full chunk stream is
+        resubmitted on each (a software relay keeps no per-child
+        progress state — conservative go-back-N, see
+        ``baselines._RelayBcast.repair_dead_relay``).  So every member
+        of the dead relay's subtree replays its repaired sub-schedule
+        from the repair instant, with relay hops counted from the
+        splice parent and the solved steady-state chunk time ``ser``;
+        the dead member itself delivers nowhere."""
+        from repro.core.gleam import DEFAULT_FAIL_DETECT
+        detect = float(self.group_kw.get("fail_detect",
+                                         DEFAULT_FAIL_DETECT))
+        parent_of = dict(parent_of)
+        lat_edge = dict(lat_edge)
+        children: Dict[str, List[str]] = {}
+        for c, p in parent_of.items():
+            children.setdefault(p, []).append(c)
+        for f in faults:
+            dead = f.node
+            if dead not in parent_of:
+                continue
+            t_rep = f.at + detect
+            par = parent_of.pop(dead)
+            children[par] = [c for c in children[par] if c != dead]
+            kids = children.pop(dead, [])
+            rec.t_deliver.pop(dead, None)
+            for c in kids:
+                parent_of[c] = par
+                children[par].append(c)
+                lat_edge[c] = self._path_latency(par, c, seg, op.key)[0]
+            # replay the subtree's deliveries with hops re-counted from
+            # the splice parent
+            stack = [(c, 1, lat_edge[c]) for c in kids]
+            while stack:
+                m, h, cum = stack.pop()
+                rec.t_deliver[m] = t0 + t_rep + \
+                    (chunks - 1 + h) * ser + cum + (h - 1) * overhead
+                for c in children.get(m, ()):
+                    stack.append((c, h + 1, cum + lat_edge[c]))
 
     def _stage_allreduce(self, op: GroupOp, transport: Transport
                          ) -> MsgRecord:

@@ -59,6 +59,9 @@ class Topology:
         self._dist: "OrderedDict[str, Dict[str, int]]" = OrderedDict()
         self._cand: Dict[Tuple[str, str], List[int]] = {}
         self._csr: Optional[tuple] = None       # (names, index, indptr, nbrs)
+        # directed (node, port) pairs whose link is administratively or
+        # fault-wise down — routing treats them as absent (fault plane)
+        self._down: set = set()
 
     # ------------------------------------------------------------ building
 
@@ -81,6 +84,59 @@ class Topology:
         self._cand.clear()
         self._csr = None
 
+    # ------------------------------------------------------- fault plane
+
+    def _link_ports(self, a: str, b: str) -> Tuple[int, int]:
+        """Port pair of the (single) a<->b link; KeyError when absent."""
+        for pa, (peer, pb) in self.ports[a].items():
+            if peer == b:
+                return pa, pb
+        raise KeyError(f"no link {a!r} <-> {b!r}")
+
+    def set_link_down(self, a: str, b: str, down: bool = True) -> None:
+        """Mark the a<->b link down (or back up) for routing.
+
+        Down links vanish from the BFS adjacency and the ECMP candidate
+        sets, so ``dist``/``candidate_ports``/``path_links`` re-derive
+        onto surviving paths — the repair half of the fault plane.  The
+        routing caches are invalidated on every change."""
+        pa, pb = self._link_ports(a, b)
+        pairs = {(a, pa), (b, pb)}
+        if down:
+            self._down |= pairs
+        else:
+            self._down -= pairs
+        self._dist.clear()
+        self._cand.clear()
+        self._csr = None
+
+    def set_switch_down(self, name: str, down: bool = True) -> None:
+        """Fail (or restore) every link of a switch at once."""
+        for p, (peer, pp) in self.ports[name].items():
+            pairs = {(name, p), (peer, pp)}
+            if down:
+                self._down |= pairs
+            else:
+                self._down -= pairs
+        self._dist.clear()
+        self._cand.clear()
+        self._csr = None
+
+    def is_down(self, node: str, port: int) -> bool:
+        return (node, port) in self._down
+
+    def clear_down(self) -> None:
+        """Restore every downed link (scenario quiesce)."""
+        if not self._down:
+            return
+        self._down.clear()
+        self._dist.clear()
+        self._cand.clear()
+        self._csr = None
+
+    def down_links(self) -> frozenset:
+        return frozenset(self._down)
+
     # ------------------------------------------------------------ routing
 
     def _adjacency(self):
@@ -94,13 +150,20 @@ class Topology:
         if self._csr is None:
             names = list(self.ports)
             index = {n: i for i, n in enumerate(names)}
+            down = self._down
+            live = {n: [peer for p, (peer, _) in self.ports[n].items()
+                        if (n, p) not in down]
+                    for n in names} if down else None
             indptr = np.zeros(len(names) + 1, np.int32)
             for i, n in enumerate(names):
-                indptr[i + 1] = indptr[i] + len(self.ports[n])
+                deg = len(live[n]) if down else len(self.ports[n])
+                indptr[i + 1] = indptr[i] + deg
             nbrs = np.empty(indptr[-1], np.int32)
             k = 0
             for n in names:
-                for _, (peer, _) in self.ports[n].items():
+                peers = live[n] if down else [
+                    peer for _, (peer, _) in self.ports[n].items()]
+                for peer in peers:
                     nbrs[k] = index[peer]
                     k += 1
             self._csr = (names, index, indptr, nbrs)
@@ -163,7 +226,8 @@ class Topology:
                 self._cand.clear()              # coarse, rarely hit
             memo = self._cand[(node, dst)] = [
                 p for p, (peer, _) in sorted(self.ports[node].items())
-                if self.dist(peer, dst) == d - 1]
+                if (node, p) not in self._down
+                and self.dist(peer, dst) == d - 1]
         return memo
 
     def next_hop_port(self, node: str, dst: str, flow_key: int = 0) -> int:

@@ -53,6 +53,10 @@ class GroupTable:
     # --- group-level ACK state (Alg 2/3)
     last_ack_psn: int = PSN_MOD - 1
     ack_out_port: Optional[int] = None  # learned: port data packets enter
+    # --- fault plane: the master's IP, stamped at envelope install so a
+    # switch-originated teardown-confirm can still be routed when
+    # ``ack_out_port`` has not been learned yet (no data flowed)
+    master_ip: int = 0
     # --- group-level NACK state (Alg 2 lines 14-16)
     nack_epsn: Optional[int] = None     # None = no pending NACK
     # --- congestion-signal filtering (§3.5): per-port CNP counters
@@ -165,8 +169,19 @@ class ForwardingTables:
         self.window = PSN_WINDOW_P4 if p4_mode else PSN_WINDOW
         self.capacity = capacity
         self.evictions = 0
+        self.salvages = 0                   # re-installs that reseeded PSN
         self.on_remove = None               # callback(table) on uninstall
         self._lru: Dict[int, None] = {}     # insertion-ordered id set
+        # LRU-evicted MID-STREAM groups leave their cumulative ACK high
+        # water mark here (group_ip -> last_ack_psn).  If the group is
+        # re-created while its broadcast is still running, the fresh
+        # table starts from that mark instead of the fresh-entry default,
+        # so add_connected/add_forwarded seed every entry's ack_psn at
+        # the stream position — otherwise the aggregate minimum would
+        # wedge at "acked up to -1" and the whole group would stall
+        # waiting for ACKs that can never go backwards.  ack_out_port is
+        # the mid-stream marker: it is only ever learned from live data.
+        self._evicted_psn: Dict[int, int] = {}
 
     def _touch(self, group_ip: int) -> None:
         self._lru.pop(group_ip, None)
@@ -182,16 +197,27 @@ class ForwardingTables:
         if (self.capacity is not None and group_ip not in self.tables
                 and len(self.tables) >= self.capacity):
             victim = next(iter(self._lru))
-            self.remove(victim)
+            vt = self.remove(victim)
+            if vt.ack_out_port is not None:     # mid-stream: salvage PSN
+                self._evicted_psn[victim] = vt.last_ack_psn
             self.evictions += 1
         t = GroupTable(group_ip, psn_window=self.window)
+        salvaged = self._evicted_psn.pop(group_ip, None)
+        if salvaged is not None:
+            t.last_ack_psn = salvaged
+            self.salvages += 1
         self.tables[group_ip] = t
         self._touch(group_ip)
         return t
 
     def remove(self, group_ip: int) -> Optional[GroupTable]:
-        """Uninstall a group (deregistration); returns the old table."""
+        """Uninstall a group (deregistration); returns the old table.
+
+        Explicit removal also forgets any eviction-salvaged PSN mark —
+        deregistration means the stream is over, so a future re-install
+        of the same GroupIP is a brand-new group."""
         self._lru.pop(group_ip, None)
+        self._evicted_psn.pop(group_ip, None)
         t = self.tables.pop(group_ip, None)
         if t is not None and self.on_remove is not None:
             self.on_remove(t)

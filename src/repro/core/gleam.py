@@ -43,11 +43,13 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import packet as pk
 from repro.core.endpoint import QP
 from repro.core.fattree import Topology
+from repro.core.faults import DEFAULT_LINK_DETECT
 from repro.core.metrics import MsgRecord
 from repro.core.packetsim import Host, PacketSim
 
 __all__ = ["GleamNetwork", "MulticastGroup", "MembershipRecord",
            "MsgRecord", "VIRTUAL_QPN", "DEFAULT_FAIL_DETECT",
+           "DEFAULT_LINK_DETECT",
            "IDLE", "REGISTERING", "ACTIVE", "UPDATING", "CLOSED"]
 
 VIRTUAL_QPN = 0x1
@@ -92,7 +94,9 @@ class MulticastGroup:
                  group_ip: int, *, master: Optional[str] = None,
                  mtu: int = pk.MTU, window: int = 256,
                  ack_freq: int = 4, rto: float = 200e-6,
-                 fail_detect: float = DEFAULT_FAIL_DETECT):
+                 fail_detect: float = DEFAULT_FAIL_DETECT,
+                 link_detect: float = DEFAULT_LINK_DETECT,
+                 max_retries: Optional[int] = None):
         self.net = net
         self.members = list(members)
         self.group_ip = group_ip
@@ -103,6 +107,8 @@ class MulticastGroup:
         self.ack_freq = ack_freq
         self.rto = rto
         self.fail_detect = fail_detect
+        self.link_detect = link_detect
+        self.max_retries = max_retries
         self.qps: Dict[str, QP] = {}
         self.records: Dict[int, MsgRecord] = {}
         self._next_msg = 0
@@ -115,6 +121,13 @@ class MulticastGroup:
         # member -> (op_seq, node record) of a fail whose isolation
         # envelope has not been sent yet (detection pending)
         self._pending_isolation: Dict[str, tuple] = {}
+        # fault plane: member ip -> (op_seq, record) of a gone-dark host
+        # whose switch-originated teardown-confirm is still in flight
+        self._pending_dark: Dict[int, tuple] = {}
+        # op_seq -> outstanding affirmation count for repair re-floods
+        # (they retire when EVERY targeted member re-affirms, unlike
+        # single-member ops)
+        self._inflight_n: Dict[int, int] = {}
         self._n_expected = 0
         for m in self.members:
             self._make_member_qp(m)
@@ -127,12 +140,14 @@ class MulticastGroup:
         qpn = self.net.alloc_qpn(m)
         qp = QP(qpn, h.ip, self.group_ip, VIRTUAL_QPN,
                 link_bw=self.net.host_bw(m), mtu=self.mtu,
-                window=self.window, ack_freq=self.ack_freq, rto=self.rto)
+                window=self.window, ack_freq=self.ack_freq, rto=self.rto,
+                max_retries=self.max_retries)
         va = 0x1000_0000 + qpn * 0x10000
         rkey = 0x100 + qpn
         qp.register_mr(rkey, va, 1 << 30)
         qp.on_complete = self._mk_on_complete()
         qp.on_deliver = self._mk_on_deliver(m)
+        qp.on_error = self._mk_on_error()
         self.qps[m] = h.add_qp(qp)
         return qp
 
@@ -150,11 +165,25 @@ class MulticastGroup:
 
     def _member_envelope(self, host: Host, p: pk.Packet, now: float) -> None:
         info = p.payload
+        if info.get("mft_op") == "prune":
+            # switch-originated teardown-confirm landed on the master:
+            # the fabric pruned the gone-dark member's ports on its own,
+            # so the pending dark record retires here — no master-driven
+            # isolation round-trip ever happened
+            for node in info["nodes"]:
+                pend = self._pending_dark.pop(node["ip"], None)
+                if pend is not None:
+                    seq, rec = pend
+                    rec.t_done = now
+                    self._inflight.pop(seq, None)
+                    if not self._inflight and self.state == UPDATING:
+                        self.state = ACTIVE
+            return
         if not any(n["ip"] == host.ip for n in info["nodes"]):
             return
         sim = self.net.sim
         mft_op = info.get("mft_op", "install")
-        if mft_op == "install":
+        if mft_op in ("install", "repair"):
             # membership affirmation (② in Fig. 4); joins carry an
             # op_seq so the master can retire the specific operation
             if host.ip != info["master_ip"]:
@@ -183,7 +212,17 @@ class MulticastGroup:
     def _master_env_ack(self, host: Host, p: pk.Packet, now: float) -> None:
         pl = p.payload
         if isinstance(pl, dict):                     # membership op ack
-            rec = self._inflight.pop(pl.get("op_seq"), None)
+            seq = pl.get("op_seq")
+            n = self._inflight_n.get(seq)
+            if n is not None:
+                # repair re-flood: retire only when EVERY targeted
+                # member has re-affirmed its (possibly moved) path
+                n -= 1
+                if n > 0:
+                    self._inflight_n[seq] = n
+                    return
+                del self._inflight_n[seq]
+            rec = self._inflight.pop(seq, None)
             if rec is not None:
                 rec.t_done = now
                 if not self._inflight and self.state == UPDATING:
@@ -235,6 +274,17 @@ class MulticastGroup:
             rec = self.records.get(msg_id)
             if rec is not None:
                 rec.t_deliver[member] = now
+        return fn
+
+    def _mk_on_error(self):
+        def fn(qp, reason, now):
+            # bounded retry exhausted: if the erroring QP is the current
+            # source's, its unfinished messages can never complete —
+            # surface the verdict on their records instead of hanging
+            if self.qps.get(self.source) is qp:
+                for rec in self.records.values():
+                    if rec.t_sender_cqe < 0 and not rec.error:
+                        rec.error = reason
         return fn
 
     def n_receivers(self) -> int:
@@ -300,12 +350,14 @@ class MulticastGroup:
             raise RuntimeError(
                 f"{what} requires an active group, state is {self.state!r}")
 
-    def _begin_op(self, kind: str, member: str, t: float
+    def _begin_op(self, kind: str, member: str, t: float, *,
+                  rec: Optional[MembershipRecord] = None
                   ) -> tuple[int, MembershipRecord]:
         self._op_seq += 1
-        rec = MembershipRecord(kind, member, t)
+        if rec is None:
+            rec = MembershipRecord(kind, member, t)
+            self.events_log.append(rec)
         self._inflight[self._op_seq] = rec
-        self.events_log.append(rec)
         self.state = UPDATING
         return self._op_seq, rec
 
@@ -441,6 +493,187 @@ class MulticastGroup:
         self.events_log.append(rec)
         return rec
 
+    # -------------------------------------- fault plane & self-healing
+
+    def reinstall(self, *, now: Optional[float] = None, run: bool = False,
+                  rec: Optional[MembershipRecord] = None
+                  ) -> MembershipRecord:
+        """Multicast-tree repair: re-flood the FULL install envelope
+        from the master.  Switch installs are idempotent, so only the
+        members whose tree path crossed a failed element actually move
+        ports (Alg. 4 re-runs onto the surviving fat-tree paths);
+        moved entries seed their ``ack_psn`` from the group aggregate,
+        so the repaired branch joins the cumulative-ACK state without
+        ever wedging Alg. 3.  Retires when every targeted member has
+        re-affirmed."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._require_live("repair")
+        seq, rec = self._begin_op("repair", "*", t, rec=rec)
+        self._inflight_n[seq] = len(
+            [m for m in self.members if m != self.master])
+        nodes = self._records_payload()
+        master_host = sim.hosts[self.master]
+        env = pk.Packet(pk.ENVELOPE, master_host.ip, self.group_ip,
+                        size=pk.HDR + 8 + 11 * len(nodes),
+                        payload={"group_ip": self.group_ip,
+                                 "master_ip": master_host.ip,
+                                 "nodes": nodes, "seq": 0, "total": 1,
+                                 "mft_op": "repair", "op_seq": seq})
+        sim.send_control(master_host, env, t)
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def link_fault(self, a: str, b: str, *, now: Optional[float] = None,
+                   duration: Optional[float] = None,
+                   run: bool = False) -> MembershipRecord:
+        """Fabric link failure under the live stream: traffic into the
+        link black-holes immediately; after ``link_detect`` (loss of
+        light) the master repairs the tree onto surviving paths with a
+        full re-flood.  ``duration`` makes it a flap — the link heals
+        on its own, but the repaired tree deliberately stays on the
+        surviving paths (no flap-back thrash).  The record's latency is
+        fault -> every member re-affirmed on the repaired tree."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._require_live("link-fault")
+        sim.link_down(a, b)
+        if duration is not None:
+            sim.schedule(t + duration, lambda tt: sim.link_up(a, b))
+        rec = MembershipRecord("link-fault", f"{a}~{b}", t)
+        self.events_log.append(rec)
+        sim.schedule(t + self.link_detect,
+                     lambda tt: self.reinstall(now=tt, rec=rec))
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def switch_fault(self, name: str, *, now: Optional[float] = None,
+                     run: bool = False) -> MembershipRecord:
+        """Whole-switch failure: every one of its links goes dark at
+        once; recovery is the same detect + re-flood as ``link_fault``
+        (the fault plan validator has already rejected plans that leave
+        a member unreachable — fail a leaf and you must model its hosts
+        as ``host_gone_dark`` instead)."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._require_live("switch-fault")
+        sim.switch_down(name)
+        rec = MembershipRecord("switch-fault", name, t)
+        self.events_log.append(rec)
+        sim.schedule(t + self.link_detect,
+                     lambda tt: self.reinstall(now=tt, rec=rec))
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def host_gone_dark(self, member: str, *, now: Optional[float] = None,
+                       run: bool = False) -> MembershipRecord:
+        """A member host dies silently (NIC stops answering anything —
+        harder than ``fail``, which only kills the group QP).  The
+        access leaf detects the dark port after ``link_detect`` and
+        originates the teardown itself: ports are pruned hop-by-hop
+        along the aggregation reverse path, each tree switch un-wedges
+        locally, and the envelope lands on the master as the confirm —
+        recovery with NO master round-trip, so it completes in
+        detect + one-way latency rather than detect + RTT."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._check_removable("host-dark", member)
+        ip = self.qps[member].ip
+        sim.host_dark(member)
+        sim.retire_qp(self.qps[member])     # excised for good: the
+        self.members.remove(member)         # scenario reset must not
+                                            # resurrect it
+        seq, rec = self._begin_op("host-dark", member, t)
+        self._pending_dark[ip] = (seq, rec)
+        leaf, _ = self.net.topo.peer(member, 0)
+
+        def detect(tt: float) -> None:
+            for port, q in sim.switches[leaf].prune_dead_member(
+                    ip, tt, group_ip=self.group_ip):
+                sim.send(leaf, port, q, tt)
+
+        sim.schedule(t + self.link_detect, detect)
+        if run:
+            self._run_until_op(rec)
+        return rec
+
+    def master_crash(self, *, now: Optional[float] = None,
+                     run: bool = False) -> MembershipRecord:
+        """The master/source host dies mid-stream; the survivors heal
+        (Appendix B generalized to an unplanned handover):
+
+        1. ``link_detect`` later, the dead master's access leaf prunes
+           its connected entry (``prune_dead_member``) — BEFORE
+           re-election makes that never-ACKing entry aggregable again
+           (``link_detect`` << ``fail_detect``: the order is
+           load-bearing).
+        2. ``fail_detect`` later, the lowest-rank surviving member
+           re-elects itself master + source and resumes transmission
+           from the dead sender's ``snd_una``: the aggregate minimum is
+           exactly what ``snd_una`` tracked, so every receiver's rqPSN
+           is >= it (nobody NACKs below the new base) and the
+           outstanding span fits the window (no wedge).  Unfinished
+           messages are resubmitted as tails under their original
+           msg_ids, so the original records complete normally."""
+        sim = self.net.sim
+        t = sim.now if now is None else now
+        self._require_live("master-crash")
+        if len(self.members) < 2:
+            raise ValueError("master_crash needs a surviving member")
+        old = self.source
+        old_qp = self.qps[old]
+        una = old_qp.snd_una
+        incomplete = [m for m in old_qp.msgs if m.t_complete < 0]
+        sim.host_dark(old)
+        sim.retire_qp(old_qp)   # the group moves on without it: a
+                                # scenario-reset revival would replay
+                                # its frozen window into severed tables
+        self.members.remove(old)
+        seq, rec = self._begin_op("master-crash", old, t)
+        old_ip = old_qp.ip
+        leaf, _ = self.net.topo.peer(old, 0)
+
+        def dark_detect(tt: float) -> None:
+            for port, q in sim.switches[leaf].prune_dead_member(
+                    old_ip, tt, group_ip=self.group_ip):
+                sim.send(leaf, port, q, tt)
+
+        def reelect(tt: float) -> None:
+            new = self.members[0]               # lowest-rank survivor
+            nqp = self.qps[new]
+            # resume exactly at the dead sender's cumulative-ACK point
+            nqp.sq_psn = nqp.snd_una = nqp.snd_nxt = una
+            self.source = self.master = new
+            for m in incomplete:
+                end = pk.psn_add(m.base_psn, m.n_pkts)
+                tail = pk.psn_sub(end, pk.psn_max(una, m.base_psn))
+                if tail <= 0:
+                    continue
+                nbytes = m.nbytes - (m.n_pkts - tail) * self.mtu
+                nqp.submit(max(nbytes, 1), tt, op=m.op, va=m.va,
+                           rkey=m.rkey, payload=m.payload,
+                           msg_id=m.msg_id)
+            rec.t_done = tt
+            self._inflight.pop(seq, None)
+            if not self._inflight and self.state == UPDATING:
+                self.state = ACTIVE
+            # re-flood the install envelope from the new master: the
+            # repair sweep prunes the tree branches that only existed to
+            # reach the dead master's leaf (they would otherwise sit in
+            # the aggregate as never-ACKing forwarded entries), and the
+            # tree re-roots at the survivor.
+            self.reinstall(now=tt)
+            sim.kick(sim.hosts[new], tt)
+
+        sim.schedule(t + self.link_detect, dark_detect)
+        sim.schedule(t + self.fail_detect, reelect)
+        if run:
+            self._run_until_op(rec)
+        return rec
+
     def close(self) -> None:
         """Deregister the group: uninstall every switch table (their
         memory and port-utilization load are released through the
@@ -521,13 +754,15 @@ class GleamNetwork:
 
     def unicast_qp(self, a: str, b: str, *, mtu: int = pk.MTU,
                    window: int = 256, ack_freq: int = 4,
-                   rto: float = 200e-6) -> tuple[QP, QP]:
+                   rto: float = 200e-6,
+                   max_retries: Optional[int] = None) -> tuple[QP, QP]:
         """A plain RC connection a -> b (baselines: multiple unicasts,
-        overlay relays)."""
+        overlay relays).  ``max_retries`` bounds the sender QP's RTO
+        retransmits (fault scenarios); receivers never retry."""
         ha, hb = self.sim.hosts[a], self.sim.hosts[b]
         qa = QP(self.alloc_qpn(a), ha.ip, hb.ip, 0,
                 link_bw=self.host_bw(a), mtu=mtu, window=window,
-                ack_freq=ack_freq, rto=rto)
+                ack_freq=ack_freq, rto=rto, max_retries=max_retries)
         qb = QP(self.alloc_qpn(b), hb.ip, ha.ip, qa.qpn,
                 link_bw=self.host_bw(b), mtu=mtu, window=window,
                 ack_freq=ack_freq, rto=rto)

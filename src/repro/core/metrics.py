@@ -37,6 +37,9 @@ class MsgRecord:
     ``t_sender_cqe`` is -1 until the sender-side completion is observed;
     ``t_deliver`` maps member name -> delivery time and fills in as
     receivers finish (flow-level engines fill all of it at once).
+    ``error`` is the bounded-retry verdict: empty for a clean completion,
+    else an attributable reason (e.g. ``"retry_exceeded"``) meaning the
+    op terminated explicitly instead of completing — never a hang.
     """
 
     msg_id: int
@@ -44,6 +47,11 @@ class MsgRecord:
     t_submit: float
     t_sender_cqe: float = -1.0
     t_deliver: Dict[str, float] = dataclasses.field(default_factory=dict)
+    error: str = ""
+
+    @property
+    def errored(self) -> bool:
+        return bool(self.error)
 
     def jct(self, n_receivers: int) -> float:
         """Submission -> last receiver delivery (inf while incomplete)."""

@@ -101,13 +101,15 @@ class Host:
         self.ctrl: deque = deque()          # feedback/control, priority
         self.no_qp_drops = 0
         self.dead_drops = 0                 # traffic to deactivated QPs
+        self.dark = False                   # NIC gone dark (fault plane)
         self.on_envelope: Optional[Callable] = None
         self.on_envelope_ack: Optional[Callable] = None
         self._qp_rr = 0
         self._kick_t = INF
         # single-NIC egress link record (see PacketSim._links); filled in
         # by PacketSim.__init__ for every host with a port-0 uplink
-        self._nic: Optional[list] = [0.0, 0.0, 0, None, 0, False, 0.0]
+        self._nic: Optional[list] = [0.0, 0.0, 0, None, 0, False, 0.0,
+                                     False]
         # per-message CPU submission overhead (storage-stack model, §5.2.2)
         self.overhead = 0.0
         # ready-QP set: QPs with sender-side work pending, maintained by
@@ -137,6 +139,9 @@ class Host:
     # ------------------------------------------------------------ receive
 
     def on_packet(self, p: pk.Packet, now: float) -> None:
+        if self.dark:                       # gone-dark NIC: silent sink
+            self.dead_drops += 1
+            return
         kind = p.kind
         if kind == _DATA:
             qp = self.qps.get(p.dst_qpn)
@@ -228,18 +233,23 @@ class PacketSim:
         self._q: List = []
         self._seq = itertools.count()
         # (node, port) -> [bw, delay, arrive_kind, handler, peer_port,
-        #                  from_switch, free_t]: lazily-memoized link
-        # facts (the topology is immutable while a sim exists) plus the
-        # mutable egress-free time in the same record, so the per-hop
-        # path does one dict probe total.  ``_out`` indexes the same
-        # records as node -> port-indexed list (string keys hash faster
-        # than fresh tuples on the per-copy emission path).
+        #                  from_switch, free_t, down]: lazily-memoized
+        # link facts (the topology is immutable while a sim exists) plus
+        # the mutable egress-free time and fault-plane down flag in the
+        # same record, so the per-hop path does one dict probe total.
+        # ``_out`` indexes the same records as node -> port-indexed list
+        # (string keys hash faster than fresh tuples on the per-copy
+        # emission path).
         self._links: Dict[tuple, list] = {}
         self._out: Dict[str, List[Optional[list]]] = {}
         self.now = 0.0
         self.events = 0
         self.dropped = 0
+        self.fault_dropped = 0              # black-holed on a downed link
         self.tx_bytes = 0
+        self._faulted = False               # any fault API called since
+                                            # the last clear_faults()
+        self._dark_deactivated: list = []   # QPs host_dark() silenced
         for h in self.hosts.values():       # hosts emit through port 0
             if 0 in topo.ports.get(h.name, ()):
                 h._nic = self._link_info(h.name, 0)
@@ -253,6 +263,91 @@ class PacketSim:
         """Clear every egress reservation (scenario quiesce)."""
         for info in self._links.values():
             info[6] = 0.0
+
+    # ------------------------------------------------------- fault plane
+    #
+    # The engine lowers each FaultEvent to one of these calls on the
+    # typed event loop.  Fabric faults flip the down flag in the
+    # memoized link records (so the hot path pays one truthiness test,
+    # no dict probe) *and* in the topology (so repair-time route
+    # recomputation sees the survivors); host faults silence the NIC.
+    # clear_faults() restores everything at scenario quiesce.
+
+    def _flag_link(self, a: str, b: str, down: bool) -> None:
+        pa, pb = self.topo._link_ports(a, b)
+        for node, port in ((a, pa), (b, pb)):
+            info = self._links.get((node, port))
+            if info is not None:
+                info[7] = down
+
+    def _routes_dirty(self) -> None:
+        for sw in self.switches.values():
+            sw._nh_memo.clear()
+
+    def link_down(self, a: str, b: str) -> None:
+        self._faulted = True
+        self.topo.set_link_down(a, b, True)
+        self._flag_link(a, b, True)
+        self._routes_dirty()
+
+    def link_up(self, a: str, b: str) -> None:
+        self.topo.set_link_down(a, b, False)
+        self._flag_link(a, b, False)
+        self._routes_dirty()
+
+    def switch_down(self, name: str) -> None:
+        self._faulted = True
+        self.topo.set_switch_down(name, True)
+        for port, (peer, pport) in sorted(self.topo.ports[name].items()):
+            for node, p in ((name, port), (peer, pport)):
+                info = self._links.get((node, p))
+                if info is not None:
+                    info[7] = True
+        self._routes_dirty()
+
+    def host_dark(self, name: str) -> None:
+        """Host NIC goes silently dark: drops everything, emits nothing.
+        The fabric links stay up — detection is the neighbours' job."""
+        self._faulted = True
+        host = self.hosts[name]
+        host.dark = True
+        host.ctrl.clear()
+        for qp in host.qps.values():
+            if qp.alive:
+                self._dark_deactivated.append(qp)
+                qp.deactivate()
+
+    def retire_qp(self, qp) -> None:
+        """Permanently decommission a QP silenced by ``host_dark``: the
+        scenario reset (``clear_faults``) revives darkened QPs so OTHER
+        groups sharing the host keep working across ``run_many``
+        scenarios — but the faulted group's own QP must never come
+        back.  Its group excised the member (re-election / teardown
+        confirm) and a revived sender would replay its frozen
+        outstanding window into tables that no longer exist, stealing
+        NIC bandwidth from the next scenario."""
+        try:
+            self._dark_deactivated.remove(qp)
+        except ValueError:
+            pass
+
+    def clear_faults(self) -> None:
+        """Undo every injected fault (scenario quiesce).  Reactivation
+        matters: cached static groups share host QPs across run_many
+        scenarios, so a QP silenced by host_dark must come back."""
+        if not self._faulted:
+            return
+        self._faulted = False
+        for info in self._links.values():
+            info[7] = False
+        self.topo.clear_down()
+        for h in self.hosts.values():
+            h.dark = False
+        for qp in self._dark_deactivated:
+            qp.alive = True
+            qp._ready_sync()
+        self._dark_deactivated.clear()
+        self._routes_dirty()
 
     # ------------------------------------------------------------ engine
 
@@ -323,7 +418,8 @@ class PacketSim:
         handler = sw if sw is not None else self.hosts[peer]
         info = self._links[(node, port)] = [
             link.bw, link.delay, kind, handler, peer_port,
-            node in self.switches, 0.0]
+            node in self.switches, 0.0,
+            self.topo.is_down(node, port)]
         by_port = self._out.setdefault(node, [])
         while len(by_port) <= port:
             by_port.append(None)
@@ -339,6 +435,10 @@ class PacketSim:
         self._send_via(info, p, now)
 
     def _send_via(self, info: list, p: pk.Packet, now: float) -> None:
+        if info[7]:                         # fault plane: link is down —
+            self.fault_dropped += 1         # black-hole, no feedback
+            pk.release(p)
+            return
         start = info[6]
         if start < now:
             start = now

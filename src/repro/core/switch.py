@@ -134,8 +134,11 @@ class GleamSwitch:
         port = self._nh_memo.get(key, -1)
         if port == -1:
             host = self.ip_host.get(p.dst_ip)
-            port = None if host is None else self.topo.next_hop_port(
-                self.name, host, flow_key=key[1])
+            try:
+                port = None if host is None else self.topo.next_hop_port(
+                    self.name, host, flow_key=key[1])
+            except ValueError:
+                port = None     # unroutable mid-fault: drop, not crash
             self._nh_memo[key] = port
         if port is None:
             return []
@@ -145,11 +148,21 @@ class GleamSwitch:
               now: float) -> List[Emit]:
         """Algorithm 1 (+ MR-update interception, + Appendix B learning)."""
         self.stats.data_in += 1
+        sync: List[Emit] = []
         if t.ack_out_port != in_port:
             # first data packet, or multicast source switched (Appendix B):
             # feedback must now exit through the new ingress port.
+            prev_out = t.ack_out_port
             t.ack_out_port = in_port
             t.agg_entries_cache = t.agg_min = None
+            if prev_out is not None and self._agg_entries(t):
+                # source switch: the NEW reverse path has never seen this
+                # subtree's cumulative state, so re-emit the aggregate
+                # toward the new source.  In the planned Appendix-B
+                # rotation the aggregate equals last_ack_psn and this
+                # emits nothing; after a crash recovery it is what syncs
+                # the re-elected sender's snd_una with reality.
+                sync = self._generate(t, now)
         if p.op == "mr_update" and isinstance(p.payload, dict):
             # §3.3: the extra WRITE message carrying per-receiver MR info.
             # Update connected entries, then forward it as normal data so
@@ -171,6 +184,8 @@ class GleamSwitch:
                     q.va, q.rkey = e.va, e.rkey
             out.append((e.port, q))
         self.stats.data_copies += len(out)
+        if sync:
+            out.extend(sync)
         return out
 
     # ------------------------------------------------------ feedback plane
@@ -317,8 +332,15 @@ class GleamSwitch:
         info = p.payload
         if info.get("mft_op") in ("leave", "fail"):
             return self._envelope_remove(p, in_port, now)
+        if info.get("mft_op") == "prune":
+            return self._envelope_prune(p, in_port, now)
+        if info.get("mft_op") == "sever":
+            return self._envelope_sever(p, in_port, now)
+        repair = info.get("mft_op") == "repair"
         g = info["group_ip"]
         t = self.tables.get(g) or self.tables.create(g)
+        if info.get("master_ip"):
+            t.master_ip = info["master_ip"]
         # Make the tree traversable from ANY member (Appendix B: the master
         # "can be any node" and the source may rotate): the upstream port the
         # envelope entered through is part of the tree too.  If it faces a
@@ -328,11 +350,28 @@ class GleamSwitch:
         if up_peer not in self.host_ip and in_port not in t.entries:
             t.add_forwarded(in_port)
         down: Dict[int, list] = {}
+        released = False
+        if self.topo._down:
+            # repair re-flood: tree edges over downed links are dead
+            # weight — black-holed data copies AND a never-ACKing
+            # aggregation entry.  Drop them up front; surviving members
+            # re-register through live ports below (candidate_ports
+            # already excludes downed ports), releasing any refs.
+            for port in [pt for pt in t.entries
+                         if (self.name, pt) in self.topo._down]:
+                t.remove_port(port)
+                released = True
         for node in info["nodes"]:
             ip = node["ip"]
             host = self.ip_host.get(ip)
             if host is None:
                 continue
+            # re-install (fault repair re-floods the full envelope): a
+            # member already registered through its chosen port is left
+            # untouched — idempotence keeps refcounts and ACK state from
+            # drifting — but the sub-envelope still continues downstream
+            # (a deeper switch may be the one that had to move).
+            prev = t.member_port.get(ip)
             # directly connected?
             direct = None
             for port, (peer, _) in self.topo.ports[self.name].items():
@@ -340,13 +379,21 @@ class GleamSwitch:
                     direct = port
                     break
             if direct is not None:
+                if prev == direct:
+                    down.setdefault(direct, []).append(node)
+                    continue
+                if prev is not None:
+                    released |= self._drop_member(t, ip)
                 t.add_connected(direct, ip, node["qpn"],
                                 node.get("va", 0), node.get("rkey", 0))
                 self._count_port_ref(t, direct)
                 t.member_port[ip] = direct
                 down.setdefault(direct, []).append(node)
                 continue
-            cands = self.topo.candidate_ports(self.name, host)
+            try:
+                cands = self.topo.candidate_ports(self.name, host)
+            except ValueError:
+                continue        # unroutable mid-fault: skip this node
             cands = [c for c in cands if c != in_port]
             if not cands:
                 continue
@@ -356,16 +403,46 @@ class GleamSwitch:
                 out = reuse[0]            # reuse existing tree edge
             else:
                 out = min(cands, key=lambda c: (self.port_util.get(c, 0), c))
+            if prev == out:
+                down.setdefault(out, []).append(node)
+                continue
+            if prev is not None:
+                released |= self._drop_member(t, ip)
             t.add_forwarded(out)
             self._count_port_ref(t, out)
             t.member_port[ip] = out
             down.setdefault(out, []).append(node)
+        if repair:
+            # a repair envelope carries the FULL membership, so any
+            # member still indexed here but absent from the sub-envelope
+            # was rerouted around this switch by the new tree: release
+            # its refs, or the stale branch below its old port survives
+            # the sweep and keeps black-holing copies into the fault.
+            node_ips = {node["ip"] for node in info["nodes"]}
+            for ip in [m for m in t.member_port if m not in node_ips]:
+                released |= self._drop_member(t, ip)
+            # this switch is on the repaired tree, and the repaired tree
+            # at this switch is exactly {in_port} + the sub-envelope
+            # ports.  Any ref-less forwarded edge outside that set is a
+            # stale old-tree edge: it would bounce data copies into
+            # bypassed switches (and a never-ACKing aggregation entry).
+            keep = set(down)
+            keep.add(in_port)
+            for port in [pt for pt, e in t.entries.items()
+                         if pt not in keep and e.type == FORWARDED
+                         and not t.port_refs.get(pt)]:
+                t.remove_port(port)
+                released = True
         emits: List[Emit] = []
         for port, nodes in down.items():
             q = p.copy()
             q.payload = {**info, "nodes": nodes}
             q.size = pk.HDR + 8 + 11 * len(nodes)   # Fig. 17 layout scale
             emits.append((port, q))
+        if released and t.ack_out_port is not None and self._agg_entries(t):
+            # a moved member's old port may have owned the pending
+            # minimum: re-run Alg. 3 so the repaired tree un-wedges
+            emits.extend(self._generate(t, now))
         return emits
 
     def _envelope_remove(self, p: pk.Packet, in_port: int,
@@ -397,9 +474,12 @@ class GleamSwitch:
                 host = self.ip_host.get(ip)
                 if host is None:
                     continue
-                cands = [c for c in self.topo.candidate_ports(self.name,
-                                                              host)
-                         if c != in_port and c in t.entries]
+                try:
+                    cands = [c for c in self.topo.candidate_ports(
+                        self.name, host)
+                        if c != in_port and c in t.entries]
+                except ValueError:
+                    continue    # unroutable mid-fault: nothing to relay
                 if cands:
                     down.setdefault(cands[0], []).append(node)
                 continue
@@ -426,4 +506,147 @@ class GleamSwitch:
             return emits
         if t.ack_out_port is not None and self._agg_entries(t):
             emits.extend(self._generate(t, now))
+        return emits
+
+    # --------------------------------------------- fault plane (pruning)
+
+    def _drop_member(self, t: GroupTable, ip: int) -> bool:
+        """Release one member's local registration (dead host or a
+        repair that moved it): give back its port ref and drop the
+        entry when it was the last user.  Returns True if local state
+        changed (the caller re-runs Alg. 3 to un-wedge)."""
+        port = t.member_port.pop(ip, None)
+        if port is None:
+            return False
+        e = t.entries.get(port)
+        refs_left = self._release_port_ref(t, port)
+        if e is not None and (
+                (e.type == CONNECTED and e.dest_ip == ip)
+                or (e.type == FORWARDED and refs_left == 0)):
+            t.remove_port(port)
+        return True
+
+    def _toward_master(self, t: GroupTable, info: dict) -> Optional[int]:
+        """Egress port for a switch-originated confirm: the aggregation
+        reverse path when learned, else unicast toward the master."""
+        if t is not None and t.ack_out_port is not None:
+            return t.ack_out_port
+        mip = (t.master_ip if t is not None else 0) or info.get(
+            "master_ip", 0)
+        mhost = self.ip_host.get(mip)
+        if mhost is None:
+            return None
+        try:
+            return self.topo.next_hop_port(self.name, mhost,
+                                           flow_key=info["group_ip"])
+        except ValueError:
+            return None
+
+    def prune_dead_member(self, ip: int, now: float,
+                          group_ip: Optional[int] = None) -> List[Emit]:
+        """Switch-originated teardown (fault plane): the access link to
+        a member went permanently dark.  Prune the member from every
+        group table serving it through this switch, re-run Alg. 3 so
+        local aggregation un-wedges WITHOUT a master round-trip, and
+        send a ``prune`` envelope along the aggregation reverse path —
+        each upstream tree switch prunes hop-by-hop and the master host
+        finally receives it as the teardown-confirm.
+
+        ``group_ip`` scopes the teardown to ONE group's table: the
+        fault plane drives this per group (each group's fault plan
+        carries its own events), which also keeps batched ``run_many``
+        scenarios independent experiments — a fault injected by one
+        scenario must not prune another scenario's staged tables."""
+        emits: List[Emit] = []
+        host = self.ip_host.get(ip)
+        dead_ports = {port for port, (peer, _)
+                      in self.topo.ports[self.name].items() if peer == host}
+        items = list(self.tables.tables.items()) if group_ip is None else \
+            [(group_ip, self.tables.get(group_ip))]
+        for g, t in items:
+            if t is None:
+                continue
+            if t.ack_out_port in dead_ports:
+                # the dead host was this table's DATA SOURCE: everything
+                # this switch fed is severed from the stream, not just
+                # the member entry.  Tear the local table down and relay
+                # a ``sever`` out of each tree edge so the whole
+                # orphaned tree unwinds hop-by-hop (a re-elected master
+                # re-floods a fresh tree afterwards; without this the
+                # old root's branch is off the new tree, no repair
+                # envelope ever visits it, and its MFT entries leak
+                # until group teardown).
+                info = {"group_ip": g, "master_ip": t.master_ip,
+                        "mft_op": "sever"}
+                self.stats.envelopes += 1
+                for port, e in sorted(t.entries.items()):
+                    if e.type == FORWARDED and port not in dead_ports:
+                        q = pk.Packet(pk.ENVELOPE, 0, info["master_ip"],
+                                      size=pk.HDR + 8 + 11, payload=info)
+                        emits.append((port, q))
+                self.tables.remove(g)
+                continue
+            if ip not in t.member_port:
+                continue
+            info = {"group_ip": g, "master_ip": t.master_ip,
+                    "mft_op": "prune", "nodes": [{"ip": ip}]}
+            self._drop_member(t, ip)
+            self.stats.envelopes += 1
+            if not t.port_refs:
+                self.tables.remove(g)
+                t = None
+            elif t.ack_out_port is not None and self._agg_entries(t):
+                emits.extend(self._generate(t, now))
+            out = self._toward_master(t, info)
+            if out is not None:
+                q = pk.Packet(pk.ENVELOPE, 0, info["master_ip"],
+                              size=pk.HDR + 8 + 11, payload=info)
+                emits.append((out, q))
+        return emits
+
+    def _envelope_sever(self, p: pk.Packet, in_port: int,
+                        now: float) -> List[Emit]:
+        """One hop of the dead-source teardown: the upstream neighbor
+        toward the (dead) source unwound its table.  If data really
+        entered through that edge (``ack_out_port`` — or it was never
+        learned, i.e. the stream never started), this switch's subtree
+        is severed too: uninstall and relay out of every remaining tree
+        edge.  A switch that already re-rooted away from the severed
+        upstream just prunes the dead edge and keeps serving."""
+        info = p.payload
+        t = self.tables.get(info["group_ip"])
+        if t is None:
+            return []
+        if t.ack_out_port is not None and t.ack_out_port != in_port:
+            if not t.port_refs.get(in_port):
+                t.remove_port(in_port)
+            return []
+        emits: List[Emit] = [
+            (port, p.copy()) for port, e in sorted(t.entries.items())
+            if e.type == FORWARDED and port != in_port]
+        self.tables.remove(info["group_ip"])
+        return emits
+
+    def _envelope_prune(self, p: pk.Packet, in_port: int,
+                        now: float) -> List[Emit]:
+        """One hop of the switch-originated teardown-confirm: prune the
+        dead member locally, un-wedge aggregation, relay toward the
+        master.  A non-tree switch (fallback unicast routing) just
+        relays."""
+        info = p.payload
+        t = self.tables.get(info["group_ip"])
+        emits: List[Emit] = []
+        if t is not None:
+            changed = False
+            for node in info["nodes"]:
+                changed |= self._drop_member(t, node["ip"])
+            if not t.port_refs:
+                self.tables.remove(info["group_ip"])
+                t = None
+            elif changed and t.ack_out_port is not None \
+                    and self._agg_entries(t):
+                emits.extend(self._generate(t, now))
+        out = self._toward_master(t, info)
+        if out is not None and out != in_port:
+            emits.append((out, p))
         return emits

@@ -49,10 +49,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.faults import FAULT_CHOICES, FaultEvent
+
 __all__ = [
-    "OP_CHOICES", "TRANSPORT_CHOICES", "EVENT_CHOICES", "RELAY_OVERHEAD",
-    "GroupOp", "MemberEvent", "Workload", "Transport",
-    "register_transport", "get_transport", "transport_names",
+    "OP_CHOICES", "TRANSPORT_CHOICES", "EVENT_CHOICES", "FAULT_CHOICES",
+    "RELAY_OVERHEAD", "GroupOp", "MemberEvent", "FaultEvent", "Workload",
+    "Transport", "register_transport", "get_transport", "transport_names",
 ]
 
 OP_CHOICES = ("bcast", "write", "unicast", "allreduce")
@@ -206,6 +208,12 @@ class GroupOp:
     gleam bcast/write only — the overlay relays have no in-fabric
     membership to update).
 
+    ``faults`` is the timed fault-injection list (``core/faults.py``):
+    link/switch/master faults require the native transport (the fabric
+    recovery paths are Gleam machinery); ``host_gone_dark`` is also
+    valid on the overlay relays, where the engines repair the relay
+    schedule around the dead host instead.
+
     ``loss_rate`` / ``ecn_backlog`` are the §5 loss/congestion
     scenario parameters (Figs. 15/16), carried in the IR so a sweep
     point is one serializable value: ``loss_rate`` is the per-hop
@@ -227,6 +235,7 @@ class GroupOp:
     key: int = 0
     chunks: int = 8
     events: Tuple[MemberEvent, ...] = ()
+    faults: Tuple[FaultEvent, ...] = ()
     loss_rate: Optional[float] = None
     ecn_backlog: Optional[float] = None
 
@@ -237,6 +246,9 @@ class GroupOp:
         object.__setattr__(self, "events", tuple(
             e if isinstance(e, MemberEvent) else MemberEvent.from_dict(e)
             for e in self.events))
+        object.__setattr__(self, "faults", tuple(
+            f if isinstance(f, FaultEvent) else FaultEvent.from_dict(f)
+            for f in self.faults))
         if self.op not in OP_CHOICES:
             raise ValueError(
                 f"unknown op {self.op!r}; choose from {OP_CHOICES}")
@@ -261,6 +273,8 @@ class GroupOp:
                 f"ecn_backlog must be positive bytes, got {self.ecn_backlog}")
         if self.events:
             self._check_events()
+        if self.faults:
+            self._replay_dynamics()            # validates as it replays
 
     def _check_events(self) -> None:
         """Replay the membership timeline so invalid sequences fail at
@@ -310,15 +324,130 @@ class GroupOp:
         """Events in time order (stable for equal ``at``)."""
         return sorted(self.events, key=lambda e: e.at)
 
+    def sorted_faults(self) -> List[FaultEvent]:
+        """Faults in time order (stable for equal ``at``)."""
+        return sorted(self.faults, key=lambda f: f.at)
+
+    def _replay_dynamics(self) -> dict:
+        """Replay the merged event+fault timeline (events first on
+        ties), validating it and returning the role bookkeeping the
+        fault-aware lowerings share.  The re-election rule mirrors the
+        runtime (``gleam.MulticastGroup``): member rank is list order
+        (source first, joins appended), and a crashed master hands the
+        source role to the lowest-rank survivor."""
+        if self.op not in ("bcast", "write"):
+            raise ValueError(
+                f"faults require a bcast/write op, not {self.op}")
+        native = get_transport(self.transport).native
+        order = self.ordered_members()
+        present = set(order)
+        source = order[0]
+        sources = {source}
+        dark: set = set()
+        snaps: List[Tuple[float, frozenset, str]] = []
+        timeline = sorted(
+            [(e.at, 0, e) for e in self.events]
+            + [(f.at, 1, f) for f in self.faults],
+            key=lambda x: (x[0], x[1]))
+        for at, is_fault, ev in timeline:
+            if not is_fault:
+                # _check_events validated the event stream alone; the
+                # merged replay re-checks against fault-induced removals
+                if ev.kind == "join":
+                    if ev.member in present:
+                        raise ValueError(
+                            f"join: {ev.member!r} already a member at "
+                            f"t={at}")
+                    present.add(ev.member)
+                    order.append(ev.member)
+                elif ev.kind in ("leave", "fail"):
+                    if ev.member not in present or ev.member == source:
+                        raise ValueError(
+                            f"{ev.kind}: {ev.member!r} is not a removable "
+                            f"member at t={at} (fault interleaving)")
+                    present.discard(ev.member)
+                    order.remove(ev.member)
+                else:                           # master-switch
+                    if ev.member not in present:
+                        raise ValueError(
+                            f"master-switch: {ev.member!r} is not a member "
+                            f"at t={at} (fault interleaving)")
+                    source = ev.member
+                    sources.add(source)
+            elif ev.kind == "host_gone_dark":
+                if ev.node not in present:
+                    raise ValueError(
+                        f"host_gone_dark: {ev.node!r} is not a member "
+                        f"at t={at}")
+                if ev.node == source:
+                    raise ValueError(
+                        f"host_gone_dark: {ev.node!r} is the current "
+                        f"source (use master_crash)")
+                present.discard(ev.node)
+                order.remove(ev.node)
+                dark.add(ev.node)
+            elif ev.kind == "master_crash":
+                if not native:
+                    raise ValueError(
+                        "master_crash requires the native (gleam) "
+                        f"transport, not {self.transport!r}")
+                if len(present) < 2:
+                    raise ValueError(
+                        f"master_crash at t={at}: no survivor left to "
+                        f"re-elect (need >= 2 live members)")
+                present.discard(source)
+                order.remove(source)
+                dark.add(source)
+                source = order[0]               # lowest-rank survivor
+                sources.add(source)
+            else:                               # link/switch fabric fault
+                if not native:
+                    raise ValueError(
+                        f"{ev.kind} requires the native (gleam) "
+                        f"transport, not {self.transport!r}")
+            snaps.append((at, frozenset(present), source))
+        return {"present": frozenset(present), "source": source,
+                "sources": frozenset(sources), "dark": frozenset(dark),
+                "snaps": snaps}
+
+    def fault_roles(self) -> dict:
+        """Membership/source timeline of the merged event+fault replay.
+
+        Returns ``present`` / ``source`` / ``sources`` (every member
+        that ever held the source role) / ``dark`` plus ``present_at``
+        and ``source_at`` closures over the replay snapshots (state
+        *after* everything scheduled at or before the queried time)."""
+        roles = self._replay_dynamics()
+        snaps = roles["snaps"]
+        init = (frozenset(self.ordered_members()), self.ordered_members()[0])
+
+        def _at(t: float) -> Tuple[frozenset, str]:
+            state = init
+            for at, present, source in snaps:
+                if at > t:
+                    break
+                state = (present, source)
+            return state
+
+        roles["present_at"] = lambda t: _at(t)[0]
+        roles["source_at"] = lambda t: _at(t)[1]
+        return roles
+
     def surviving_receivers(self) -> List[str]:
         """Initial receivers that are still members when every event has
         fired — the set a dynamic op must deliver to (joiners receive
         from their join point and are not required to complete the
-        in-flight message)."""
+        in-flight message).  With faults, members that went dark or ever
+        held the source role (a re-elected master re-originates the
+        stream instead of receiving it) are excused too."""
         src = self.source or self.members[0]
         gone = {e.member for e in self.events
                 if e.kind in ("leave", "fail")}
-        return [m for m in self.members if m != src and m not in gone]
+        if not self.faults:
+            return [m for m in self.members if m != src and m not in gone]
+        roles = self._replay_dynamics()
+        return [m for m in self.members
+                if m in roles["present"] and m not in roles["sources"]]
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -1,0 +1,112 @@
+"""Shared drivers for the fault-plane invariants, used by BOTH the
+hypothesis property tests (``test_protocol_properties``, CI) and the
+deterministic cases in ``test_faults`` (run everywhere — hypothesis is
+an optional dependency).
+
+Two ISSUE-7 acceptance properties, as executable drivers:
+
+- **re-election convergence** — any (valid) sequence of master crashes
+  ends with exactly one live master, the lowest-rank survivor, the
+  stream complete for every surviving receiver, and no switch holding
+  an orphaned MFT entry for a dead host;
+- **bounded retry** — with a retry cap set, a permanently severed path
+  costs at most ``cap`` unproductive RTO replays before the QP parks
+  in a TERMINAL error state surfaced on the message record: bounded
+  work, explicit attributable failure, never a hang.
+"""
+from __future__ import annotations
+
+from repro.core import fattree
+from repro.core.gleam import DEFAULT_FAIL_DETECT, GleamNetwork
+
+MEMBERS = ["h0", "h1", "h2", "h3"]
+NBYTES = 1 << 17
+
+# master crashes must be spaced by at least the re-election delay: a
+# second crash before the survivor took over would target a corpse
+MIN_CRASH_GAP = DEFAULT_FAIL_DETECT + 1e-4
+
+
+def run_reelection_case(crash_offsets, nbytes=NBYTES):
+    """Crash the current master at each offset (offsets must honor
+    ``MIN_CRASH_GAP``); assert the group converges."""
+    assert all(b - a >= MIN_CRASH_GAP
+               for a, b in zip(crash_offsets, crash_offsets[1:]))
+    assert len(crash_offsets) <= len(MEMBERS) - 2   # survivor remains
+    net = GleamNetwork(fattree.fig4())
+    g = net.multicast_group(MEMBERS, max_retries=7)
+    g.register()
+    sim = net.sim
+    rec = g.bcast(nbytes, now=0.0)
+    for at in crash_offsets:
+        sim.schedule(at, lambda now: g.master_crash(now=now))
+    sim.run(until=max(crash_offsets) + 0.05)
+
+    dead = set(MEMBERS) - set(g.members)
+    assert len(dead) == len(crash_offsets)
+    # exactly one live master: the lowest-rank survivor holds source +
+    # teardown authority, and is actually alive
+    assert g.master == g.source == g.members[0]
+    assert not sim.hosts[g.master].dark
+    assert g.qps[g.master].alive and not g.qps[g.master].error
+    assert all(sim.hosts[m].dark for m in dead)
+    # the stream completed for every surviving receiver — no wedge
+    for m in g.members:
+        if m != g.master:
+            assert m in rec.t_deliver, f"{m} never delivered"
+    assert rec.t_sender_cqe > 0 and not rec.error
+    # no orphaned MFT entries: no switch still indexes a dead host,
+    # and no entry sits outside the group's live port refs
+    live_ips = {g.qps[m].ip for m in g.members}
+    for name, sw in sim.switches.items():
+        t = sw.tables.get(g.group_ip)
+        if t is None:
+            continue
+        orphans = set(t.member_port) - live_ips
+        assert not orphans, f"{name} still indexes dead ips {orphans}"
+    # full teardown leaves nothing behind
+    g.close()
+    for name, sw in sim.switches.items():
+        assert sw.tables.get(g.group_ip) is None, f"{name} leaked a table"
+    return rec
+
+
+def run_bounded_retry_case(cap, sever_at, nbytes=NBYTES):
+    """Sever every uplink of the source's access leaf at ``sever_at``
+    with NO repair; assert bounded work and a terminal, attributable
+    error (or a clean completion if the message beat the sever)."""
+    net = GleamNetwork(fattree.fig4())
+    g = net.multicast_group(MEMBERS, max_retries=cap)
+    g.register()
+    sim = net.sim
+    rec = g.bcast(nbytes, now=0.0)
+    leaf = net.topo.ports["h0"][0][0]
+
+    def sever(now):
+        for p in sorted(net.topo.ports[leaf]):
+            peer = net.topo.ports[leaf][p][0]
+            if not peer.startswith("h"):
+                sim.link_down(leaf, peer)
+
+    sim.schedule(sever_at, sever)
+    sim.run(until=sever_at + 2.0)
+    qp = g.qps["h0"]
+    if not qp.error:
+        # everything (incl. the final ACK sweep) beat the sever
+        assert rec.t_sender_cqe > 0 and not rec.error
+        return rec
+    assert qp.error == "retry_exceeded"
+    assert rec.error == "retry_exceeded"
+    assert not qp.alive                     # out of service
+    # the budget is the budget: cap unproductive replays, then the
+    # (cap+1)-th RTO enters error WITHOUT another replay
+    assert qp.retries == cap + 1
+    # each replay resends at most the outstanding window once
+    assert qp.retransmitted <= cap * qp.window
+    # terminal: more simulated time changes nothing
+    sent, deadline = qp.retransmitted, qp.timer_deadline
+    sim.run(until=sim.now + 1.0)
+    assert qp.retransmitted == sent
+    assert qp.error == "retry_exceeded" and not qp.alive
+    assert qp.timer_deadline == deadline
+    return rec

@@ -187,3 +187,85 @@ def test_switch_table_capacity_evicts_oldest_group():
     assert sum(sw.port_util.values()) == sum(live.port_refs.values())
     sw.tables.remove(g2.group_ip)
     assert sum(sw.port_util.values()) == 0
+
+
+# ===================================== mid-stream eviction salvage (faults)
+
+class TestMidStreamEvictionSalvage:
+    """LRU-evicting a group whose broadcast is STILL RUNNING must not
+    wedge the stream on re-install: the store salvages the evicted
+    table's cumulative-ACK high water mark and seeds the fresh table
+    (and therefore every fresh entry) at the stream position instead of
+    the "acked up to -1" default."""
+
+    def test_salvage_reseeds_last_ack_psn(self):
+        ft = ForwardingTables(capacity=1)
+        t = ft.create(1)
+        t.ack_out_port = 0              # mid-stream marker (data flowed)
+        t.last_ack_psn = 1234
+        ft.create(2)                    # evicts group 1 mid-stream
+        assert ft.evictions == 1 and ft.salvages == 0
+        t1b = ft.create(1)              # re-install (repair re-flood)
+        assert ft.salvages == 1
+        assert t1b.last_ack_psn == 1234
+        t1b.add_connected(3, dest_ip=9, dest_qpn=17)
+        t1b.add_forwarded(4)
+        assert t1b.entries[3].ack_psn == 1234
+        assert t1b.entries[4].ack_psn == 1234
+
+    def test_idle_eviction_is_not_salvaged(self):
+        ft = ForwardingTables(capacity=1)
+        t = ft.create(1)
+        t.last_ack_psn = 777            # no ack_out_port: stream over /
+        ft.create(2)                    # never started — nothing to save
+        t1b = ft.create(1)
+        assert ft.salvages == 0
+        assert t1b.last_ack_psn == PSN_MOD - 1
+
+    def test_explicit_remove_forgets_the_mark(self):
+        ft = ForwardingTables(capacity=1)
+        t = ft.create(1)
+        t.ack_out_port = 0
+        t.last_ack_psn = 555
+        ft.create(2)                    # evict mid-stream: mark saved
+        ft.remove(1)                    # deregistration: stream is over
+        t1b = ft.create(1)
+        assert ft.salvages == 0
+        assert t1b.last_ack_psn == PSN_MOD - 1
+
+    def test_eviction_during_live_bcast_recovers_end_to_end(self):
+        """Regression: capacity pressure evicts the active group's
+        table mid-broadcast; the master's repair re-flood re-creates it
+        with the salvaged PSN seed and the stream completes — the
+        aggregate minimum never goes backwards, the sender never
+        wedges."""
+        from repro.core import fattree
+        from repro.core.gleam import GleamNetwork
+
+        net = GleamNetwork(fattree.testbed(n_hosts=6))
+        g = net.multicast_group(["h0", "h1", "h2", "h3"])
+        g.register()
+        sim = net.sim
+        sw = sim.switches["SW0"]
+        rec = g.bcast(1 << 17, now=0.0)
+
+        def squeeze(now):
+            t = sw.tables.get(g.group_ip)
+            assert t is not None and t.ack_out_port is not None
+            sw.tables.capacity = 1
+            sw.tables.create(9999)      # LRU pressure evicts the live
+                                        # group and saves its PSN mark
+            assert sw.tables.get(g.group_ip) is None
+            g.reinstall(now=now)        # Alg. 4 repair re-flood
+
+        sim.schedule(3e-6, squeeze)
+        sim.run(until=0.1)
+        # two evictions: the live group under pressure, then the dummy
+        # when the repair re-flood re-installs at capacity
+        assert sw.tables.evictions == 2
+        assert sw.tables.salvages == 1
+        assert rec.t_sender_cqe > 0 and not rec.error
+        for m in ("h1", "h2", "h3"):
+            assert m in rec.t_deliver, f"{m} never delivered"
+        t = sw.tables.get(g.group_ip)
+        assert t is not None and t.last_ack_psn != PSN_MOD - 1

@@ -77,9 +77,11 @@ def test_run_many_scenarios_reseed_independently():
 
 
 def test_run_many_parallel_worker_failure_surfaces():
-    """A thunk that raises while a WORKER drives its scenario must fail
-    the parent call with the child traceback, not vanish into a dead
-    child process."""
+    """A thunk that raises while a WORKER drives its scenario degrades
+    gracefully: the parent warns which scenario failed, re-runs it
+    serially (same per-index reseed), and the deterministic error then
+    reproduces with its REAL type and traceback — it must not vanish
+    into a dead child process or an opaque EOFError."""
     eng = _lossy_engine()
 
     def boom():
@@ -90,8 +92,10 @@ def test_run_many_parallel_worker_failure_surfaces():
 
     recs = []
     scenarios = [_stage_bcast(recs), bad]
-    with pytest.raises(RuntimeError, match="deferred submission"):
-        eng.run_many(scenarios, timeout=30.0, workers=2)
+    with pytest.warns(RuntimeWarning, match=r"re-running scenarios \[1\]"):
+        with pytest.raises(ValueError, match="deferred submission"):
+            eng.run_many(scenarios, timeout=30.0, workers=2)
+    assert any("deferred submission" in e for e in eng.last_run_errors)
 
 
 # ------------------------------------------------------- event budget

@@ -224,3 +224,38 @@ def test_psn_wrapped_total_order(a, d):
             assert not pk.psn_geq(a, b, w)
         assert pk.psn_min(a, b, w) == a
         assert pk.psn_max(a, b, w) == b
+
+
+# --------------- fault-plane invariants (drivers in _fault_props.py;
+# deterministic twins in test_faults.py)
+
+@settings(max_examples=25, **FAST)
+@given(first=st.floats(min_value=1e-6, max_value=2e-3),
+       gap=st.one_of(st.none(),
+                     st.floats(min_value=0.0, max_value=1e-3)))
+def test_reelection_converges_for_any_crash_schedule(first, gap):
+    """Any valid master-crash sequence (1-2 crashes on 4 members,
+    spaced past the re-election window) ends with exactly one live
+    master — the lowest-rank survivor — the stream complete for every
+    surviving receiver, dead hosts dark, and no switch left holding an
+    MFT entry for a dead host (the dead-source sever cascade unwinds
+    the branches the re-rooted tree bypassed)."""
+    from _fault_props import MIN_CRASH_GAP, run_reelection_case
+    offsets = [first]
+    if gap is not None:
+        offsets.append(first + MIN_CRASH_GAP + gap)
+    run_reelection_case(offsets, nbytes=1 << 16)
+
+
+@settings(max_examples=25, **FAST)
+@given(cap=st.integers(min_value=0, max_value=8),
+       sever_at=st.floats(min_value=1e-6, max_value=5e-5))
+def test_bounded_retry_is_terminal_for_any_budget(cap, sever_at):
+    """For ANY retry budget and sever instant: a permanently severed
+    path costs at most ``cap`` unproductive RTO replays (each bounded
+    by the outstanding window) before the QP parks in a terminal
+    ``retry_exceeded`` error surfaced on the message record — or the
+    message had already beaten the sever and completes cleanly.  Never
+    a hang, never unbounded retransmission."""
+    from _fault_props import run_bounded_retry_case
+    run_bounded_retry_case(cap, sever_at, nbytes=1 << 16)

@@ -227,6 +227,22 @@ def _packet_sweep(points, seeds: int, workers) -> dict:
     return out
 
 
+def _packet_faults(group: int) -> dict:
+    """Fault-sweep point: the fig_faults recovery axis (one scenario per
+    fault class, fresh fabric each — see benchmarks/fig_faults.py) on
+    the packet engine; wall time plus measured recovery per class."""
+    from benchmarks.fig_faults import _sweep, members_for, recovery_cases
+    t0 = time.perf_counter()
+    jct = _sweep("packet", group)
+    wall = time.perf_counter() - t0
+    base = jct["r0"][0]
+    return {"group": group, "wall_s": round(wall, 4),
+            "jct_ms": base * 1e3,
+            "recovery_us": {
+                label: round((jct[label][0] - base) * 1e6, 3)
+                for label, _ in recovery_cases(members_for(group))}}
+
+
 def _child_packet(kind: str, spec: dict) -> int:
     if kind == "packet-single":
         res = {"passes": [_packet_single(spec["group"], spec["loss"])
@@ -234,6 +250,8 @@ def _child_packet(kind: str, spec: dict) -> int:
     elif kind == "packet-sweep":
         res = _packet_sweep([tuple(p) for p in spec["points"]],
                             spec["seeds"], spec["workers"])
+    elif kind == "packet-faults":
+        res = _packet_faults(spec["group"])
     else:
         raise ValueError(kind)
     print(json.dumps(res))
@@ -437,10 +455,17 @@ def _main_packet(args, result: dict) -> None:
                 <= 1e-9 + 1e-6 * abs(b["jct_ms"]), \
                 f"fixed-seed JCT changed vs {args.before_git}: {b} {s}"
 
+    # fault-sweep point: the ISSUE-7 recovery axis (benchmarks/
+    # fig_faults.py) — every fault class must end in measured recovery
+    result["fault_sweep"] = _run_child(
+        "packet-faults", {}, spec={"group": 4 if args.smoke else 8})
+
     if args.smoke:       # regression tripwires for CI
         assert result["single"][0]["passes"][0]["events"] > 0
         assert all(p["mean_ms"] > 0
                    for p in result["sweep_parallel"]["points"])
+        assert all(v > 0
+                   for v in result["fault_sweep"]["recovery_us"].values())
 
 
 def main(argv=None) -> int:
@@ -459,7 +484,8 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None)
     ap.add_argument("--_child", default=None,
                     choices=("batched", "serial", "flow-loss",
-                             "packet-single", "packet-sweep"),
+                             "packet-single", "packet-sweep",
+                             "packet-faults"),
                     help=argparse.SUPPRESS)
     ap.add_argument("--_spec", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Fault-plane smoke gate (wired into CI).
+
+Two invariants from ISSUE 7:
+
+1. **zero-fault bit-identity** — scenarios expressible in the PR-6
+   Workload IR (no ``faults=`` field) must reproduce the frozen
+   fixed-seed records in ``benchmarks/ref_faults_zero.json`` *bit for
+   bit* on both engines.  The entire fault plane is opt-in: a workload
+   that injects nothing must not perturb a single float.
+2. **recovery-latency parity** — every fault class (link_down,
+   link_flap, switch_fail, host_gone_dark, master_crash) completes on
+   BOTH engines with no hang and no QP error, and the measured
+   recovery latency (cqe_fault - cqe_nofault) agrees within 15%.
+
+Exit code 0 = clean; 1 = divergence (details on stderr).
+
+    PYTHONPATH=src python tools/check_faults.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import fattree, workload as wl          # noqa: E402
+from repro.core.engine import make_engine               # noqa: E402
+
+from freeze_fault_refs import OUT as REF_PATH, record_rows  # noqa: E402
+
+TOL = 0.15
+AT = 3e-6                      # fault lands 3us into the stream
+NBYTES = 1 << 17
+MEMBERS = ["h0", "h1", "h2", "h3"]
+
+
+def check_zero_fault(problems):
+    with open(REF_PATH) as fh:
+        ref = json.load(fh)
+    for engine, want in ref["engines"].items():
+        # frozen JSON renders tuples as lists; normalize through a JSON
+        # round trip before comparing, or the match fails on type alone
+        got = json.loads(json.dumps(record_rows(engine)))
+        if got != want:
+            for name in want:
+                if got.get(name) != want[name]:
+                    problems.append(
+                        f"zero-fault {engine}/{name}: records diverge "
+                        f"from frozen PR-6 ref\n  want {want[name]}\n"
+                        f"  got  {got.get(name)}")
+        else:
+            print(f"check_faults: zero-fault {engine}: "
+                  f"{len(want)} scenarios bit-identical")
+
+
+def _leaf_uplink(topo, host):
+    """First non-host peer of the host's leaf switch."""
+    leaf = topo.ports[host][0][0]
+    for p in sorted(topo.ports[leaf]):
+        peer = topo.ports[leaf][p][0]
+        if not peer.startswith("h"):
+            return leaf, peer
+    raise RuntimeError(f"no uplink above {host}")
+
+
+def _run(engine_name, faults):
+    eng = make_engine(engine_name, fattree.fig4(),
+                      **({"seed": 7} if engine_name == "packet" else {}))
+    rec = eng.stage(wl.GroupOp("bcast", MEMBERS, NBYTES,
+                               faults=tuple(faults)))
+    eng.run(timeout=1.0)
+    return rec
+
+
+def check_recovery_parity(problems):
+    topo = fattree.fig4()
+    leaf, spine = _leaf_uplink(topo, "h2")
+    cases = [
+        ("link_down", [wl.FaultEvent("link_down", AT, node=leaf,
+                                     peer=spine)]),
+        ("link_flap", [wl.FaultEvent("link_flap", AT, node=leaf,
+                                     peer=spine, duration=50e-6)]),
+        ("switch_fail", [wl.FaultEvent("switch_fail", AT, node=spine)]),
+        ("host_gone_dark", [wl.FaultEvent("host_gone_dark", AT,
+                                          node="h3")]),
+        ("master_crash", [wl.FaultEvent("master_crash", AT)]),
+    ]
+    base = {e: _run(e, []) for e in ("packet", "flow")}
+    for name, faults in cases:
+        rec = {}
+        n_expect = len(wl.GroupOp("bcast", MEMBERS, NBYTES,
+                                  faults=tuple(faults))
+                       .surviving_receivers())
+        for engine in ("packet", "flow"):
+            r = _run(engine, faults)
+            if r.error or r.t_sender_cqe < 0 or len(r.t_deliver) < n_expect:
+                problems.append(
+                    f"{name}/{engine}: incomplete (error={r.error!r}, "
+                    f"cqe={r.t_sender_cqe}, "
+                    f"deliver={len(r.t_deliver)}/{n_expect})")
+            rec[engine] = r.t_sender_cqe - base[engine].t_sender_cqe
+        p, f = rec["packet"], rec["flow"]
+        div = abs(p - f) / max(p, 1e-9)
+        print(f"check_faults: {name:15s} recovery packet="
+              f"{p * 1e6:8.2f}us flow={f * 1e6:8.2f}us "
+              f"div={100 * div:.1f}%")
+        if div > TOL:
+            problems.append(
+                f"{name}: packet-vs-flow recovery divergence "
+                f"{100 * div:.1f}% > {100 * TOL:.0f}%")
+
+
+def main() -> int:
+    problems: list = []
+    check_zero_fault(problems)
+    check_recovery_parity(problems)
+    if problems:
+        for p in problems:
+            print(f"check_faults: {p}", file=sys.stderr)
+        return 1
+    print("check_faults: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
