@@ -1,0 +1,146 @@
+"""Application traffic plane — end-to-end train-step time and serving
+QPS/tail-latency per transport, on BOTH engines (the ROADMAP item-1
+headline; the paper's §5 figures compare raw collectives, this one
+compares what they add up to for an LM).
+
+Three scenarios per (model config x transport), sized from the smoke
+``ArchConfig``s via ``apps.collectives_lowering`` (collective bytes
+are pure config math — see ``tests/test_apps.py`` for the anchors):
+
+- **train** — one training step on a ``data=4 x model=2`` mesh
+  (tp-allreduce + MoE all-to-all fan-mesh where applicable +
+  dp-gradsync), executed phase by phase (``apps.metrics.run_phased``)
+  with step time = sum of phase maxima;
+- **serve** — the open-loop generator (``apps.traffic``): seeded
+  Poisson arrivals onto 4 TP-2 replicas, prefill/decode collectives +
+  2-copy KV replication per request, reported as offered vs achieved
+  QPS with p50/p99/p999 request latency (mean over ``--seeds``
+  arrival seeds);
+- **scale-out** — the replica weight broadcast (bf16 shards to every
+  replica), the pure one-to-many op where the transport gap is
+  widest.
+
+Every point runs on the packet engine AND the flow engine; the derived
+column carries the packet-vs-flow divergence (gate: <= 10%,
+``tools/check_apps.py``).  Packet batches are ``--workers`` aware.
+"""
+from __future__ import annotations
+
+from repro.apps.collectives_lowering import (MeshShape,
+                                             train_step_workload,
+                                             weight_bcast_workload)
+from repro.apps.metrics import jct, split_phases, step_time
+from repro.apps.traffic import ArrivalSpec, ServingGenerator
+from repro.configs.base import get_config
+from repro.core import fattree
+from repro.core.engine import make_engine
+
+CONFIGS = ("mixtral_8x7b", "llama3_2_3b")
+TRANSPORTS = ("gleam", "multiunicast", "ring", "binary-tree")
+
+TRAIN_MESH = MeshShape(data=4, model=2)
+TRAIN_SEQ, TRAIN_BATCH = 256, 32
+
+N_REPLICAS, TP = 4, 2
+PROMPT_LEN, DECODE_LEN, KV_REPLICAS = 128, 16, 2
+SERVE_RATE, SERVE_N = 2e4, 32
+
+
+def _train_sweep(engine_name, cfg, workers, timeout=180.0):
+    """All transports' train steps as ONE phase-split batch; returns
+    {transport: step_seconds}."""
+    eng = make_engine(engine_name, fattree.testbed(
+        n_hosts=TRAIN_MESH.n_chips))
+    groups = []
+    for tr in TRANSPORTS:
+        wl = train_step_workload(cfg, TRAIN_MESH, seq=TRAIN_SEQ,
+                                 batch=TRAIN_BATCH, transport=tr)
+        groups.append((tr, split_phases(wl)))
+    flat = [p for _, ps in groups for p in ps]
+    results = iter(eng.run_workloads(flat, timeout=timeout,
+                                     workers=workers))
+    out = {}
+    for tr, ps in groups:
+        ops, recs = [], []
+        for p in ps:
+            ops.extend(p.ops)
+            recs.extend(next(results))
+        out[tr] = step_time(ops, recs)
+    return out
+
+
+def _serve_sweep(engine_name, cfg, workers, seeds, timeout=180.0):
+    """Mean serving report per transport over ``seeds`` arrival seeds;
+    returns {transport: dict(qps, p50, p99, p999)}."""
+    out = {}
+    for tr in TRANSPORTS:
+        gen = ServingGenerator(cfg, N_REPLICAS, TP,
+                               prompt_len=PROMPT_LEN,
+                               decode_len=DECODE_LEN,
+                               kv_replicas=KV_REPLICAS, transport=tr)
+        acc = {"qps": 0.0, "p50": 0.0, "p99": 0.0, "p999": 0.0}
+        for seed in range(seeds):
+            eng = make_engine(engine_name, fattree.testbed(
+                n_hosts=N_REPLICAS * TP))
+            rep = gen.run(eng, ArrivalSpec(rate=SERVE_RATE, n=SERVE_N,
+                                           seed=seed),
+                          timeout=timeout, workers=workers)
+            acc["qps"] += rep.achieved_qps / seeds
+            for q in ("p50", "p99", "p999"):
+                acc[q] += rep.quantiles[q] / seeds
+        out[tr] = acc
+    return out
+
+
+def _scaleout_sweep(engine_name, cfg, workers, timeout=180.0):
+    """Replica weight-bcast time per transport (one batch)."""
+    eng = make_engine(engine_name, fattree.testbed(
+        n_hosts=N_REPLICAS * TP))
+    wls = [weight_bcast_workload(cfg, N_REPLICAS, TP, transport=tr)
+           for tr in TRANSPORTS]
+    results = eng.run_workloads(wls, timeout=timeout, workers=workers)
+    return {tr: max(jct(r) for r in recs)
+            for tr, recs in zip(TRANSPORTS, results)}
+
+
+def run(rows, engine="packet", workers=0, seeds=2, configs=CONFIGS):
+    # both engines always run — the packet-vs-flow divergence IS the
+    # result; --engine only picks which flow solver to compare against
+    flow_engine = engine if engine.startswith("flow") else "flow"
+    for name in configs:
+        cfg = get_config(name, smoke=True)
+
+        tp_ = _train_sweep("packet", cfg, workers)
+        tf_ = _train_sweep(flow_engine, cfg, None)
+        for tr in TRANSPORTS:
+            div = abs(tp_[tr] - tf_[tr]) / tp_[tr]
+            rows.append((f"figapps/train_{name}_{tr}/packet_ms",
+                         tp_[tr] * 1e3,
+                         f"flow={tf_[tr] * 1e3:.4f}ms "
+                         f"div={100 * div:.1f}% (mesh dp4xtp2 "
+                         f"seq={TRAIN_SEQ} batch={TRAIN_BATCH})"))
+
+        sp = _serve_sweep("packet", cfg, workers, seeds)
+        sf = _serve_sweep(flow_engine, cfg, None, seeds)
+        for tr in TRANSPORTS:
+            div = abs(sp[tr]["qps"] - sf[tr]["qps"]) / sp[tr]["qps"]
+            rows.append((
+                f"figapps/serve_{name}_{tr}/packet_qps",
+                sp[tr]["qps"],
+                f"offered={SERVE_RATE:.0f}/s "
+                f"p50={sp[tr]['p50'] * 1e6:.1f}us "
+                f"p99={sp[tr]['p99'] * 1e6:.1f}us "
+                f"p999={sp[tr]['p999'] * 1e6:.1f}us "
+                f"flow_qps={sf[tr]['qps']:.0f} div={100 * div:.1f}% "
+                f"(seeds={seeds})"))
+
+        wp = _scaleout_sweep("packet", cfg, workers)
+        wf = _scaleout_sweep(flow_engine, cfg, None)
+        for tr in TRANSPORTS:
+            div = abs(wp[tr] - wf[tr]) / wp[tr]
+            rows.append((f"figapps/scaleout_{name}_{tr}/packet_ms",
+                         wp[tr] * 1e3,
+                         f"flow={wf[tr] * 1e3:.4f}ms "
+                         f"div={100 * div:.1f}% "
+                         f"({N_REPLICAS} replicas x tp{TP})"))
+    return rows

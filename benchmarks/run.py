@@ -54,6 +54,7 @@ MODULES = [
     "fig15_16_loss",         # Figs. 15-16 loss tolerance / goodput
     "fig_churn",             # membership churn: JCT + recovery time
     "fig_faults",            # fault injection: recovery latency + JCT
+    "fig_apps",              # app plane: train-step time + serve QPS/p99
     "collective_schedules",  # adapted layer: ICI schedule comparison
 ]
 

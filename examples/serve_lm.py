@@ -5,6 +5,12 @@ drains them through the shared decode pool, printing throughput and the
 batching efficiency (steps used vs sequential lower bound).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --requests 12 --pool 4
+
+``--fabric 4x2`` (replicas x tensor-parallel) additionally drives the
+network simulator with the same arch under an open-loop Poisson load
+(``repro.apps.traffic``) and prints offered vs achieved QPS with
+p50/p99/p999 request latency per transport, before the real server
+runs.  ``--rate`` sets the offered load for that projection.
 """
 import argparse
 import time
@@ -19,15 +25,57 @@ from repro.models.model import model_defs
 from repro.runtime.serve import Server
 
 
+def fabric_report(cfg, spec: str, rate: float, n: int,
+                  max_new: int) -> None:
+    """Project serving tails on the network simulator: open-loop
+    Poisson arrivals onto ``replicas x tp`` fabric hosts, per
+    transport (flow engine; benchmarks/fig_apps.py packet-validates
+    the same generator)."""
+    from repro.apps.traffic import ArrivalSpec, ServingGenerator
+    from repro.core import fattree
+    from repro.core.engine import make_engine
+
+    try:
+        n_replicas, tp = (int(x) for x in spec.split("x"))
+    except ValueError:
+        raise SystemExit(f"--fabric wants <replicas>x<tp>, got {spec!r}")
+    print(f"[serve_lm] fabric: {n_replicas} replicas x tp{tp}, "
+          f"Poisson {rate:.0f} req/s, {n} requests")
+    arr = ArrivalSpec(rate=rate, n=n, seed=0)
+    for tr in ("gleam", "multiunicast", "ring", "binary-tree"):
+        gen = ServingGenerator(cfg, n_replicas, tp, prompt_len=64,
+                               decode_len=max_new,
+                               kv_replicas=min(2, n_replicas - 1),
+                               transport=tr)
+        eng = make_engine("flow",
+                          fattree.testbed(n_hosts=n_replicas * tp))
+        rep = gen.run(eng, arr)
+        q = rep.quantiles
+        print(f"[serve_lm] fabric {tr:>13}: achieved "
+              f"{rep.achieved_qps:.0f}/{rep.offered_qps:.0f} qps, "
+              f"p50 {q['p50'] * 1e6:.1f}us p99 {q['p99'] * 1e6:.1f}us "
+              f"p999 {q['p999'] * 1e6:.1f}us")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="granite_3_2b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--pool", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--fabric", default=None, metavar="RxTP",
+                    help="also project serving QPS/tails on the network "
+                         "simulator with this layout, e.g. 4x2 "
+                         "(replicas x tensor-parallel)")
+    ap.add_argument("--rate", type=float, default=2e4,
+                    help="offered load (req/s) for the --fabric "
+                         "projection")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
+    if args.fabric:
+        fabric_report(cfg, args.fabric, args.rate,
+                      max(args.requests, 32), args.max_new)
     mesh = single_device_mesh()
     params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
     srv = Server(cfg, params, mesh, pool=args.pool, max_seq=128)

@@ -13,8 +13,15 @@ Examples:
   PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 3
   PYTHONPATH=src python examples/train_lm.py --steps 50 --fail-at 30 \
       --ckpt-dir /tmp/ft_demo     # then re-run: it resumes from step 20
+
+``--fabric dp4xtp2`` additionally lowers ONE step of this config onto
+the network simulator (the application traffic plane, ``repro.apps``):
+it prints the per-phase collective bytes and the simulated step-
+communication time per transport (gleam vs the §2.3 baselines) for the
+given data x model mesh, before training runs.
 """
 import argparse
+import re
 
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import DataConfig
@@ -44,6 +51,39 @@ def make_cfg(preset: dict) -> ArchConfig:
     )
 
 
+def fabric_report(cfg: ArchConfig, preset: dict, spec: str) -> None:
+    """Lower one training step of ``cfg`` onto the network simulator
+    and print the per-transport communication step time (flow engine —
+    seconds even for big meshes; see benchmarks/fig_apps.py for the
+    packet-validated version of the same numbers)."""
+    from repro.apps.collectives_lowering import (MeshShape,
+                                                train_step_workload)
+    from repro.apps.metrics import phase_stats, run_phased, step_time
+    from repro.core import fattree
+    from repro.core.engine import make_engine
+
+    m = re.fullmatch(r"dp(\d+)xtp(\d+)(?:xpp(\d+))?", spec)
+    if not m:
+        raise SystemExit(f"--fabric wants dp<D>xtp<T>[xpp<P>], "
+                         f"got {spec!r}")
+    mesh = MeshShape(data=int(m.group(1)), model=int(m.group(2)),
+                     pipe=int(m.group(3) or 1))
+    print(f"[train_lm] fabric: one step of {cfg.name} on "
+          f"{mesh.n_chips} hosts ({spec}), seq {preset['seq_len']} x "
+          f"batch {preset['global_batch']}")
+    for tr in ("gleam", "multiunicast", "ring", "binary-tree"):
+        wl = train_step_workload(cfg, mesh, seq=preset["seq_len"],
+                                 batch=preset["global_batch"],
+                                 transport=tr)
+        eng = make_engine("flow", fattree.testbed(n_hosts=mesh.n_chips))
+        ops, recs = run_phased(eng, wl)
+        phases = " ".join(
+            f"{p}={s.latency * 1e6:.1f}us"
+            for p, s in phase_stats(ops, recs).items())
+        print(f"[train_lm] fabric {tr:>13}: step comm "
+              f"{step_time(ops, recs) * 1e6:.1f}us  ({phases})")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--preset", choices=PRESETS, default="small")
@@ -54,6 +94,11 @@ def main():
                     help="inject a node failure at this step (FT demo)")
     ap.add_argument("--grad-compression", choices=("none", "int8_ef"),
                     default="none")
+    ap.add_argument("--fabric", default=None, metavar="MESH",
+                    help="also lower one step onto the network "
+                         "simulator on this mesh, e.g. dp4xtp2 or "
+                         "dp2xtp2xpp2 (prints per-transport step-"
+                         "communication time before training)")
     args = ap.parse_args()
 
     preset = PRESETS[args.preset]
@@ -73,6 +118,9 @@ def main():
     print(f"[train_lm] {cfg.name}: {n / 1e6:.1f}M params, "
           f"{args.steps} steps, batch {preset['global_batch']} x "
           f"seq {preset['seq_len']}")
+
+    if args.fabric:
+        fabric_report(cfg, preset, args.fabric)
 
     trainer = Trainer(cfg, mesh, dc, tc)
     try:

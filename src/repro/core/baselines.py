@@ -112,7 +112,9 @@ class MultiUnicastBcast(_Bcast):
 
     def _mk_deliver(self, member):
         def fn(msg_id, now):
-            self.t_deliver[member] = now
+            if member not in self.members:      # spliced out (leave): the
+                return                          # host is up but no longer
+            self.t_deliver[member] = now        # a receiver
         return fn
 
     def start(self, nbytes: int) -> None:
@@ -151,6 +153,8 @@ class _RelayBcast(_Bcast):
 
     def _mk_deliver(self, member: str):
         def fn(msg_id, now):
+            if member not in self.members:      # spliced out (leave/dark):
+                return                          # don't count or relay
             self.n_chunks_done[member] = self.n_chunks_done.get(member, 0) + 1
             if self.n_chunks_done[member] == self.chunks:
                 self.t_deliver[member] = now

@@ -402,7 +402,10 @@ class PacketEngine(_WorkloadStaging):
         concepts) lower to a scheduled NIC blackout plus, one
         ``fail_detect`` later, the relay-schedule splice
         (``repair_dead_relay``: the dead relay's children re-parent and
-        the chunk stream is resubmitted)."""
+        the chunk stream is resubmitted).  A graceful ``leave``
+        MemberEvent takes the same splice path, but immediately — the
+        departing host announces itself, so there is no detection
+        delay and no blackout."""
         members = op.ordered_members()
         kw = dict(self.relay_kw)
         if op.faults:
@@ -418,11 +421,15 @@ class PacketEngine(_WorkloadStaging):
         def thunk():
             rec.t_submit = sim.now
             b.start(op.nbytes)
+            t0 = sim.now
+            for ev in op.sorted_events():       # graceful leaves: splice now
+                sim.schedule(t0 + ev.at,
+                             lambda now, m=ev.member:
+                             b.repair_dead_relay(m, now))
             if op.faults:
                 from repro.core.gleam import DEFAULT_FAIL_DETECT
                 detect = float(self.group_kw.get("fail_detect",
                                                  DEFAULT_FAIL_DETECT))
-                t0 = sim.now
                 for f in op.sorted_faults():
                     sim.schedule(t0 + f.at,
                                  lambda now, m=f.node: sim.host_dark(m))
@@ -431,7 +438,8 @@ class PacketEngine(_WorkloadStaging):
                                  b.repair_dead_relay(m, now))
 
         self._staged.append(thunk)
-        n = len(op.surviving_receivers()) if op.faults else b.n_receivers()
+        n = len(op.surviving_receivers()) if (op.faults or op.events) \
+            else b.n_receivers()
         self._pending.append((rec, n, _cqe_from_deliveries))
         return rec
 
@@ -1338,11 +1346,22 @@ class FlowEngine(_WorkloadStaging):
             comp.append((child, hidden, lat, prop))
 
         # only host_gone_dark reaches an overlay transport (the IR
-        # validator routes fabric/master faults to native lowerings)
-        darks = op.sorted_faults() if op.faults else []
+        # validator routes fabric/master faults to native lowerings);
+        # graceful leaves splice immediately, darks after fail_detect.
+        # Each splice is (node, t_depart, t_rep): chunks stop flowing
+        # through the node at t_depart, the schedule is respliced at
+        # t_rep.
+        splices = [(e.member, e.at, e.at) for e in op.sorted_events()]
+        if op.faults:
+            from repro.core.gleam import DEFAULT_FAIL_DETECT
+            detect = float(self.group_kw.get("fail_detect",
+                                             DEFAULT_FAIL_DETECT))
+            splices += [(f.node, f.at, f.at + detect)
+                        for f in op.sorted_faults()]
+            splices.sort(key=lambda s: s[2])
 
         if not transport.chunked:               # multiunicast: direct flows
-            dead = {f.node for f in darks}
+            dead = {m for m, _, _ in splices}
 
             def fin(t0: float) -> float:
                 for child, hidden, lat, prop in comp:
@@ -1370,8 +1389,8 @@ class FlowEngine(_WorkloadStaging):
                     rec.t_deliver[child] = t0 + \
                         (chunks - 1 + hops) * ser + cum[child] + \
                         (hops - 1) * overhead
-                if darks:
-                    self._overlay_repair(op, rec, t0, ser, darks,
+                if splices:
+                    self._overlay_repair(op, rec, t0, ser, splices,
                                          parent_of, lat_edge, chunks,
                                          overhead, seg)
                 rec.t_sender_cqe = max(rec.t_deliver.values()) + back
@@ -1381,32 +1400,31 @@ class FlowEngine(_WorkloadStaging):
         return rec
 
     def _overlay_repair(self, op: GroupOp, rec: MsgRecord, t0: float,
-                        ser: float, faults, parent_of, lat_edge,
+                        ser: float, splices, parent_of, lat_edge,
                         chunks: int, overhead: float, seg: int) -> None:
-        """Analytic image of the packet relays' dark-relay splice.
+        """Analytic image of the packet relays' relay-schedule splice.
 
-        At ``at + fail_detect`` the dead relay's children re-parent onto
-        ITS parent over fresh edges and the full chunk stream is
+        ``splices`` is a time-ordered ``(node, t_depart, t_rep)`` list —
+        darks repair at ``at + fail_detect``, graceful leaves at
+        ``at`` (the departing host announces itself — no detection
+        delay).  At
+        ``t_rep`` the departed relay's children re-parent onto ITS
+        parent over fresh edges and the full chunk stream is
         resubmitted on each (a software relay keeps no per-child
         progress state — conservative go-back-N, see
         ``baselines._RelayBcast.repair_dead_relay``).  So every member
-        of the dead relay's subtree replays its repaired sub-schedule
-        from the repair instant, with relay hops counted from the
-        splice parent and the solved steady-state chunk time ``ser``;
-        the dead member itself delivers nowhere."""
-        from repro.core.gleam import DEFAULT_FAIL_DETECT
-        detect = float(self.group_kw.get("fail_detect",
-                                         DEFAULT_FAIL_DETECT))
+        of the departed relay's subtree replays its repaired
+        sub-schedule from the repair instant, with relay hops counted
+        from the splice parent and the solved steady-state chunk time
+        ``ser``; the departed member itself delivers nowhere."""
         parent_of = dict(parent_of)
         lat_edge = dict(lat_edge)
         children: Dict[str, List[str]] = {}
         for c, p in parent_of.items():
             children.setdefault(p, []).append(c)
-        for f in faults:
-            dead = f.node
+        for dead, t_depart, t_rep in splices:
             if dead not in parent_of:
                 continue
-            t_rep = f.at + detect
             par = parent_of.pop(dead)
             children[par] = [c for c in children[par] if c != dead]
             kids = children.pop(dead, [])
@@ -1420,8 +1438,14 @@ class FlowEngine(_WorkloadStaging):
             stack = [(c, 1, lat_edge[c]) for c in kids]
             while stack:
                 m, h, cum = stack.pop()
-                rec.t_deliver[m] = t0 + t_rep + \
-                    (chunks - 1 + h) * ser + cum + (h - 1) * overhead
+                # a member whose base-schedule delivery completed before
+                # the departure (so the chunks really flowed) keeps it —
+                # the packet relays' ``== chunks`` bookkeeping ignores
+                # repair duplicates
+                if not (m in rec.t_deliver
+                        and rec.t_deliver[m] <= t0 + t_depart):
+                    rec.t_deliver[m] = t0 + t_rep + \
+                        (chunks - 1 + h) * ser + cum + (h - 1) * overhead
                 for c in children.get(m, ()):
                     stack.append((c, h + 1, cum + lat_edge[c]))
 

@@ -204,9 +204,17 @@ class GroupOp:
     chunked overlay transports (ring / binary-tree) and ignored
     elsewhere; ``same_mr`` is the Appendix-C WRITE optimization
     (gleam only); ``key`` seeds ECMP spreading; ``events`` is the
-    timed membership-change list making the op *dynamic* (native
-    gleam bcast/write only — the overlay relays have no in-fabric
-    membership to update).
+    timed membership-change list making the op *dynamic*.  Joins,
+    fails, and master-switches need the native gleam transport (the
+    overlay relays have no in-fabric membership to update), but a
+    graceful ``leave`` is valid on the overlays too: the engines
+    resplice the relay schedule around the departing host at the
+    leave instant (the dark-relay repair machinery, minus the
+    failure-detection delay).
+
+    ``phase`` is a free-form application label (``"tp-allreduce"``,
+    ``"prefill"``, …) carried through to dicts and ignored by the
+    engines — ``apps/metrics.py`` groups records by it.
 
     ``faults`` is the timed fault-injection list (``core/faults.py``):
     link/switch/master faults require the native transport (the fabric
@@ -238,6 +246,7 @@ class GroupOp:
     faults: Tuple[FaultEvent, ...] = ()
     loss_rate: Optional[float] = None
     ecn_backlog: Optional[float] = None
+    phase: str = ""
 
     def __post_init__(self):
         object.__setattr__(self, "members", tuple(self.members))
@@ -283,9 +292,13 @@ class GroupOp:
             raise ValueError(
                 f"membership events require a bcast/write op, not {self.op}")
         if not get_transport(self.transport).native:
-            raise ValueError(
-                "membership events require a native (gleam) transport; "
-                f"{self.transport!r} is an overlay relay")
+            bad = [e for e in self.events if e.kind != "leave"]
+            if bad:
+                raise ValueError(
+                    "only graceful 'leave' events are valid on an overlay "
+                    f"relay transport; {self.transport!r} got "
+                    f"{bad[0].kind!r} (join/fail/master-switch need the "
+                    "native gleam fabric)")
         present = set(self.members)
         source = self.source or self.members[0]
         for e in sorted(self.events, key=lambda e: e.at):
@@ -472,10 +485,16 @@ class Workload:
         wl.bcast(members, 1 << 20)                       # gleam
         wl.bcast(members, 1 << 20, transport="ring")     # baseline
         recs = eng.run_workloads([wl])[0]                # per-op records
+
+    ``meta`` is a JSON-compatible free-form dict for generator
+    provenance (arrival seed / rate / trace, mesh shape, model name —
+    see ``apps/``), round-tripped by ``to_dict``/``from_dict`` so a
+    staged app workload is replayable from its serialized form.
     """
 
     name: str = ""
     ops: List[GroupOp] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
 
     def add(self, op: GroupOp) -> GroupOp:
         self.ops.append(op)
@@ -498,15 +517,19 @@ class Workload:
         return len(self.ops)
 
     def to_dict(self) -> dict:
-        return {"name": self.name, "ops": [op.to_dict() for op in self.ops]}
+        d = {"name": self.name, "ops": [op.to_dict() for op in self.ops]}
+        if self.meta:               # omitted when empty: old fixtures stable
+            d["meta"] = dict(self.meta)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "Workload":
-        unknown = set(d) - {"name", "ops"}
+        unknown = set(d) - {"name", "ops", "meta"}
         if unknown:
             raise ValueError(f"unknown Workload fields: {sorted(unknown)}")
         return cls(name=d.get("name", ""),
-                   ops=[GroupOp.from_dict(o) for o in d.get("ops", [])])
+                   ops=[GroupOp.from_dict(o) for o in d.get("ops", [])],
+                   meta=dict(d.get("meta", {})))
 
 
 def relay_plan(transport: Transport, members: Sequence[str]

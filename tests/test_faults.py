@@ -226,6 +226,43 @@ def test_overlay_relay_dark_resplices():
     assert not eng.net.topo._down       # the flap healed
 
 
+@pytest.mark.parametrize("transport", ["ring", "binary-tree",
+                                       "multiunicast"])
+def test_overlay_graceful_leave_resplices(transport):
+    """ISSUE-8 satellite regression: a graceful mid-stream ``leave`` on
+    an overlay relay transport must resplice the relay schedule through
+    the ``repair_dead_relay`` path — before this fix it raised at
+    construction.  Unlike a dark, a leaver's host stays up and the
+    splice is immediate (no fail_detect), so the leaver must NOT be
+    counted (or keep relaying) even though residual chunks still reach
+    its NIC, and survivors must all deliver on BOTH engines.
+
+    The parity gate is looser than PARITY_TOL: the detect-free splice
+    races the live stream head-on, where the fluid model's lack of
+    in-flight chunk state costs the most (measured ~18% on ring)."""
+    from repro.core.workload import MemberEvent
+    events = (MemberEvent("leave", "h2", AT),)
+    jcts = {}
+    for engine_name in ("packet", "flow"):
+        eng = make_engine(engine_name, fattree.fig4(),
+                          **({"seed": 7} if engine_name == "packet"
+                             else {}))
+        op = GroupOp("bcast", MEMBERS, NBYTES, transport=transport,
+                     events=events)
+        assert op.surviving_receivers() == ["h1", "h3"]
+        rec = eng.stage(op)
+        eng.run(timeout=60.0)
+        assert not rec.error
+        assert "h2" not in rec.t_deliver, "leaver was still counted"
+        for m in ("h1", "h3"):
+            assert m in rec.t_deliver, f"{m} never delivered"
+        jcts[engine_name] = rec.io_latency
+    div = abs(jcts["packet"] - jcts["flow"]) / jcts["packet"]
+    assert div <= 0.25, (
+        f"{transport}: packet {jcts['packet'] * 1e6:.2f}us vs flow "
+        f"{jcts['flow'] * 1e6:.2f}us ({100 * div:.1f}% > 25%)")
+
+
 # ============================================ re-election + sever cascade
 
 class TestMasterCrashRecovery:

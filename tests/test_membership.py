@@ -408,9 +408,13 @@ def test_event_validation():
     with pytest.raises(ValueError, match="current source"):
         GroupOp("bcast", ("h0", "h1"), 1024,
                 events=(MemberEvent("fail", "h0", 0.0),))
+    # graceful leave is valid on an overlay relay (the engines resplice
+    # the relay schedule, ISSUE 8); join/fail/master-switch are not
+    GroupOp("bcast", ("h0", "h1", "h2"), 1024, transport="ring",
+            events=(MemberEvent("leave", "h2", 0.0),))
     with pytest.raises(ValueError, match="overlay"):
         GroupOp("bcast", ("h0", "h1", "h2"), 1024, transport="ring",
-                events=(MemberEvent("leave", "h2", 0.0),))
+                events=(MemberEvent("join", "h3", 0.0),))
     with pytest.raises(ValueError, match="bcast/write"):
         GroupOp("allreduce", ("h0", "h1", "h2"), 1024,
                 events=(MemberEvent("leave", "h2", 0.0),))

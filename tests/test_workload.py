@@ -20,8 +20,9 @@ from repro.core.workload import (GroupOp, TRANSPORT_CHOICES, Transport,
 
 def test_groupop_roundtrip():
     op = GroupOp("bcast", ("h0", "h1", "h2"), 1 << 20, transport="ring",
-                 source="h1", key=3, chunks=4)
-    assert GroupOp.from_dict(op.to_dict()) == op
+                 source="h1", key=3, chunks=4, phase="weights")
+    back = GroupOp.from_dict(op.to_dict())
+    assert back == op and back.phase == "weights"
 
 
 def test_workload_roundtrip():
@@ -32,6 +33,26 @@ def test_workload_roundtrip():
     wl.allreduce(["h0", "h1", "h2"], 64 << 10, transport="binary-tree")
     back = Workload.from_dict(wl.to_dict())
     assert back.name == wl.name and back.ops == wl.ops
+
+
+def test_workload_meta_roundtrip():
+    """App-plane generator specs ride in ``meta`` (ISSUE-8): the tag
+    survives the dict round-trip, and metaless dumps stay stable (no
+    ``meta`` key) so old fixtures keep parsing."""
+    wl = Workload("serve/w0",
+                  meta={"kind": "serve", "window": 0,
+                        "spec": {"kind": "poisson", "rate": 1e4,
+                                 "n": 16, "seed": 3, "trace": []}})
+    wl.allreduce(["h0", "h1"], 4 << 10, phase="prefill")
+    d = wl.to_dict()
+    assert d["meta"]["spec"]["seed"] == 3
+    back = Workload.from_dict(d)
+    assert back.meta == wl.meta
+    assert back.ops[0].phase == "prefill"
+    plain = Workload("x")
+    plain.bcast(["h0", "h1"], 1024)
+    assert "meta" not in plain.to_dict()
+    assert Workload.from_dict(plain.to_dict()).meta == {}
 
 
 def test_groupop_validation():

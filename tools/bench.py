@@ -17,10 +17,11 @@ topology/routing/jit caches:
   process against the now-warm directory (the steady state every run
   after the first sees).
 
-It also records a **loss-sweep** point: the fig15 flow sweep
-(calibration grid + fat-tree scale grid) through the loss-aware solver
-path, so a perf regression in ``loss_factors`` shows up next to the
-fig14 numbers.
+It also records a **loss-sweep** point (the fig15 flow sweep through
+the loss-aware solver path, so a perf regression in ``loss_factors``
+shows up next to the fig14 numbers) and an **apps-sweep** point (the
+fig_apps train-step/serving lowering through the phase-split execution
+path, with a gleam-no-slower-than-multiunicast tripwire).
 
 ``--engine packet`` times the packet engine's hot path on fig15 loss
 points (the fidelity regime only it can simulate):
@@ -163,6 +164,57 @@ def _child_flow(kind: str, scales) -> int:
         "compile_est_s": round(max(p1["wall_s"] - p2["wall_s"], 0.0), 4),
     }))
     return 0
+
+
+def _flow_apps_sweep(smoke: bool) -> dict:
+    """Flow-engine fig_apps point — the application traffic plane's
+    lowering + phase-split execution path (ISSUE 8).  Full mode runs
+    the train-step sweep (every transport) for both fig_apps configs
+    plus one open-loop serving point; smoke runs one config's gleam /
+    multiunicast train steps."""
+    from benchmarks import fig_apps
+    from repro.apps.metrics import run_phased, step_time
+    from repro.apps.traffic import ArrivalSpec, ServingGenerator
+    from repro.configs.base import get_config
+    from repro.core import fattree
+    from repro.core.engine import make_engine
+
+    configs = fig_apps.CONFIGS[:1] if smoke else fig_apps.CONFIGS
+    transports = ("gleam", "multiunicast") if smoke \
+        else fig_apps.TRANSPORTS
+    rows: list = []
+    t0 = time.perf_counter()
+    for name in configs:
+        cfg = get_config(name, smoke=True)
+        from repro.apps.collectives_lowering import train_step_workload
+        for tr in transports:
+            eng = make_engine("flow", fattree.testbed(
+                n_hosts=fig_apps.TRAIN_MESH.n_chips))
+            wl = train_step_workload(
+                cfg, fig_apps.TRAIN_MESH, seq=fig_apps.TRAIN_SEQ,
+                batch=fig_apps.TRAIN_BATCH, transport=tr)
+            st = step_time(*run_phased(eng, wl, timeout=120.0))
+            rows.append((f"figapps/train_{name}_{tr}/flow_ms", st * 1e3))
+    if not smoke:
+        cfg = get_config(configs[0], smoke=True)
+        gen = ServingGenerator(
+            cfg, fig_apps.N_REPLICAS, fig_apps.TP,
+            prompt_len=fig_apps.PROMPT_LEN,
+            decode_len=fig_apps.DECODE_LEN,
+            kv_replicas=fig_apps.KV_REPLICAS)
+        eng = make_engine("flow", fattree.testbed(
+            n_hosts=fig_apps.N_REPLICAS * fig_apps.TP))
+        rep = gen.run(eng, ArrivalSpec(rate=fig_apps.SERVE_RATE,
+                                       n=fig_apps.SERVE_N, seed=0),
+                      timeout=120.0)
+        rows.append((f"figapps/serve_{configs[0]}_gleam/flow_qps",
+                     rep.achieved_qps))
+        rows.append((f"figapps/serve_{configs[0]}_gleam/flow_p99_us",
+                     rep.quantiles["p99"] * 1e6))
+    return {
+        "wall_s": round(time.perf_counter() - t0, 4),
+        "rows": [[n, round(v, 4)] for n, v in rows],
+    }
 
 
 def _flow_loss_sweep(smoke: bool) -> dict:
@@ -373,6 +425,9 @@ def _main_flow(args, result: dict) -> None:
         # loss-sweep point: fig15 on the flow engine (loss-aware solver)
         result["loss_sweep"] = _run_child("flow-loss", cache_env,
                                           spec={"smoke": args.smoke})
+        # app-plane point: fig_apps lowering + phase-split execution
+        result["apps_sweep"] = _run_child("flow-apps", cache_env,
+                                          spec={"smoke": args.smoke})
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
 
@@ -394,6 +449,15 @@ def _main_flow(args, result: dict) -> None:
         assert loss["solve_calls"] > 0
         assert loss["rows"] and all(v > 0 for _, v in loss["rows"]), \
             "loss sweep produced no positive JCTs"
+        apps = result["apps_sweep"]
+        assert apps["rows"] and all(v > 0 for _, v in apps["rows"]), \
+            "apps sweep produced no positive step times"
+        by = dict(apps["rows"])
+        gleam = [v for n, v in by.items() if n.endswith("gleam/flow_ms")]
+        multi = [v for n, v in by.items()
+                 if n.endswith("multiunicast/flow_ms")]
+        assert gleam and multi and gleam[0] <= multi[0], \
+            "gleam train step slower than multiunicast"
 
 
 def _main_packet(args, result: dict) -> None:
@@ -484,8 +548,8 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None)
     ap.add_argument("--_child", default=None,
                     choices=("batched", "serial", "flow-loss",
-                             "packet-single", "packet-sweep",
-                             "packet-faults"),
+                             "flow-apps", "packet-single",
+                             "packet-sweep", "packet-faults"),
                     help=argparse.SUPPRESS)
     ap.add_argument("--_spec", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
@@ -496,6 +560,10 @@ def main(argv=None) -> int:
         return _child_flow(args._child, scales)
     if args._child == "flow-loss":
         print(json.dumps(_flow_loss_sweep(
+            json.loads(args._spec)["smoke"])))
+        return 0
+    if args._child == "flow-apps":
+        print(json.dumps(_flow_apps_sweep(
             json.loads(args._spec)["smoke"])))
         return 0
     if args._child:

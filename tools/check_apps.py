@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Application-traffic-plane smoke gate (wired into CI).
+
+Three invariants from ISSUE 8:
+
+1. **lowering math** — the analytic ``param_count`` mirror equals
+   ``count_params(model_defs(cfg))`` exactly for every smoke arch the
+   gate drives (the collective sizes all derive from it);
+2. **train-step parity** — a small phase-split training step completes
+   on BOTH engines for gleam and the multiunicast baseline, with
+   step-time divergence <= 10%, and gleam no slower than multiunicast;
+3. **serving tails** — the open-loop generator produces a full report
+   (achieved <= offered load, monotone p50 <= p99 <= p999 quantiles)
+   with packet-vs-flow achieved-QPS divergence <= 10%.
+
+Exit code 0 = clean; 1 = divergence (details on stderr).
+
+    PYTHONPATH=src python tools/check_apps.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.apps.collectives_lowering import (MeshShape, param_count,
+                                             train_step_workload)  # noqa: E402
+from repro.apps.metrics import run_phased, step_time      # noqa: E402
+from repro.apps.traffic import (ArrivalSpec,
+                                ServingGenerator)         # noqa: E402
+from repro.configs.base import get_config                 # noqa: E402
+from repro.core import fattree                            # noqa: E402
+from repro.core.engine import make_engine                 # noqa: E402
+
+TOL = 0.10
+ARCHS = ("llama3_2_3b", "mixtral_8x7b")
+MESH = MeshShape(data=2, model=2)
+SEQ, BATCH = 64, 8
+
+
+def check_param_math(problems):
+    from repro.models.blocks import count_params
+    from repro.models.model import model_defs
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        analytic, real = param_count(cfg), count_params(model_defs(cfg))
+        if analytic != real:
+            problems.append(f"{arch}: param_count {analytic} != "
+                            f"model_defs {real}")
+        else:
+            print(f"check_apps: {arch:15s} param_count == model_defs "
+                  f"({real / 1e3:.1f}K smoke params)")
+
+
+def _step(engine_name, cfg, transport):
+    eng = make_engine(engine_name, fattree.testbed(n_hosts=MESH.n_chips))
+    wl = train_step_workload(cfg, MESH, seq=SEQ, batch=BATCH,
+                             transport=transport)
+    return step_time(*run_phased(eng, wl, timeout=60.0))
+
+
+def check_train_parity(problems):
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        steps = {}
+        for tr in ("gleam", "multiunicast"):
+            p = _step("packet", cfg, tr)
+            f = _step("flow", cfg, tr)
+            div = abs(p - f) / p
+            steps[tr] = p
+            print(f"check_apps: {arch:15s} train/{tr:13s} packet="
+                  f"{p * 1e6:8.2f}us flow={f * 1e6:8.2f}us "
+                  f"div={100 * div:.1f}%")
+            if div > TOL:
+                problems.append(
+                    f"{arch} train/{tr}: packet-vs-flow step-time "
+                    f"divergence {100 * div:.1f}% > {100 * TOL:.0f}%")
+        if steps["gleam"] > steps["multiunicast"]:
+            problems.append(
+                f"{arch}: gleam step {steps['gleam'] * 1e6:.2f}us slower "
+                f"than multiunicast {steps['multiunicast'] * 1e6:.2f}us")
+
+
+def check_serving(problems):
+    cfg = get_config("llama3_2_3b", smoke=True)
+    gen = ServingGenerator(cfg, n_replicas=4, tp=2, prompt_len=64,
+                           decode_len=16, kv_replicas=2)
+    spec = ArrivalSpec(rate=2e4, n=24, seed=0)
+    reps = {}
+    for engine in ("packet", "flow"):
+        eng = make_engine(engine, fattree.testbed(n_hosts=8))
+        rep = gen.run(eng, spec, timeout=60.0)
+        reps[engine] = rep
+        q = rep.quantiles
+        print(f"check_apps: serve/{engine:6s} achieved="
+              f"{rep.achieved_qps:8.0f}/{spec.rate:.0f} qps "
+              f"p50={q['p50'] * 1e6:.1f}us p99={q['p99'] * 1e6:.1f}us "
+              f"p999={q['p999'] * 1e6:.1f}us")
+        if rep.n_requests != spec.n:
+            problems.append(f"serve/{engine}: {rep.n_requests} of "
+                            f"{spec.n} requests reported")
+        if not 0 < rep.achieved_qps <= spec.rate * 1.05:
+            problems.append(f"serve/{engine}: achieved qps "
+                            f"{rep.achieved_qps:.0f} outside "
+                            f"(0, offered]")
+        if not q["p50"] <= q["p99"] <= q["p999"] <= q["max"]:
+            problems.append(f"serve/{engine}: non-monotone quantiles {q}")
+    p, f = reps["packet"].achieved_qps, reps["flow"].achieved_qps
+    div = abs(p - f) / p
+    if div > TOL:
+        problems.append(f"serve: packet-vs-flow achieved-QPS divergence "
+                        f"{100 * div:.1f}% > {100 * TOL:.0f}%")
+
+
+def main() -> int:
+    problems: list = []
+    check_param_math(problems)
+    check_train_parity(problems)
+    check_serving(problems)
+    if problems:
+        for p in problems:
+            print(f"check_apps: {p}", file=sys.stderr)
+        return 1
+    print("check_apps: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
