@@ -76,6 +76,18 @@ def _flow_engine(name: str):
     return "flow" if name == "packet" else name
 
 
+@functools.lru_cache(maxsize=16)
+def _workloads(big: bool, n: int, transport: str):
+    """Workload IR for one sweep point, cached: ops are immutable
+    (engines lower them into per-epoch records without touching the
+    IR), so repeated passes — `tools/bench.py` runs the sweep twice to
+    separate compile from steady state — reuse the same ~n*n GroupOps
+    instead of re-declaring them."""
+    hosts = _build(big).hosts
+    return (gleam_workload(hosts, n),
+            baseline_workload(hosts, n, transport))
+
+
 # ------------------------------------------------------------- workloads
 
 def gleam_workload(hosts, n) -> Workload:
@@ -151,11 +163,9 @@ def run(rows, engine="flow", transport="ring", scales=None, batched=True):
         for big in sorted({n * n > 1024 for n in scales}):
             group = [n for n in scales if (n * n > 1024) == big]
             eng = make_engine(engine, _build(big))
-            hosts = eng.topo.hosts
             workloads = []
             for n in group:
-                workloads.append(gleam_workload(hosts, n))
-                workloads.append(baseline_workload(hosts, n, transport))
+                workloads.extend(_workloads(big, n, transport))
             recss = eng.run_workloads(workloads)
             for i, n in enumerate(group):
                 results[n] = _values(n, recss[2 * i], recss[2 * i + 1])

@@ -55,6 +55,7 @@ MODULES = [
     "fig_churn",             # membership churn: JCT + recovery time
     "fig_faults",            # fault injection: recovery latency + JCT
     "fig_apps",              # app plane: train-step time + serve QPS/p99
+    "fig_fleet",             # fleet plane: multi-tenant SLOs + census
     "collective_schedules",  # adapted layer: ICI schedule comparison
 ]
 

@@ -46,10 +46,13 @@ class Topology:
     # and tolerates a small cache.  ~150B per dict entry, measured.
     DIST_CACHE_BYTES = 256 << 20
     _DIST_ENTRY_BYTES = 150
-    # candidate_ports memo entries are one small list each (~100B);
-    # bounded so 16k-host staging (every (hop node, dst) pair on every
-    # routed path) cannot grow the memo without limit
-    CAND_CACHE_ENTRIES = 1 << 21
+    # candidate_ports memo: one small keyed list each.  Same byte-budget
+    # LRU discipline as the dist cache — a many-destination churn run
+    # (every (hop node, dst) pair on every routed path of a 16k-host
+    # sweep) must not grow the memo without limit.  ~100B per entry
+    # (two interned key strings + a short port list), measured.
+    CAND_CACHE_BYTES = 64 << 20
+    _CAND_ENTRY_BYTES = 100
 
     def __init__(self):
         self.ports: Dict[str, Dict[int, Tuple[str, int]]] = {}
@@ -57,11 +60,22 @@ class Topology:
         self.hosts: List[str] = []
         self.switches: List[str] = []
         self._dist: "OrderedDict[str, Dict[str, int]]" = OrderedDict()
-        self._cand: Dict[Tuple[str, str], List[int]] = {}
-        self._csr: Optional[tuple] = None       # (names, index, indptr, nbrs)
+        self._cand: "OrderedDict[Tuple[str, str], List[int]]" = OrderedDict()
+        self._csr: Optional[tuple] = None  # (names, index, indptr, nbrs, prt)
         # directed (node, port) pairs whose link is administratively or
         # fault-wise down — routing treats them as absent (fault plane)
         self._down: set = set()
+        # fingerprint state: (structural revision, frozen down-set).
+        # Deliberately STATE-based, not a mutation counter: transient
+        # set_link_down()/clear_down() round trips (flow-engine fault
+        # staging) return to the original fingerprint, so staging caches
+        # keyed on it survive fault sweeps on a pristine fabric.
+        self._struct_rev = 0
+        self._fp: Tuple[int, frozenset] = (0, frozenset())
+        # When False, dist()/candidate_ports() recompute on every call
+        # without memoizing — the cache-disabled reference mode for
+        # bit-identity tests (slow; testing only).
+        self.route_cache = True
 
     # ------------------------------------------------------------ building
 
@@ -83,6 +97,18 @@ class Topology:
         self._dist.clear()
         self._cand.clear()
         self._csr = None
+        self._struct_rev += 1
+        self._fp = (self._struct_rev, frozenset(self._down))
+
+    def fingerprint(self) -> Tuple[int, frozenset]:
+        """Cheap identity of the current routed topology.
+
+        Changes exactly when routing could change: on ``connect`` (the
+        structural revision bumps) and whenever the down-set changes
+        (``set_link_down``/``set_switch_down``/``clear_down``).  Staging
+        caches key derived artifacts (trees, paths, latencies) on this
+        value and drop them when it moves."""
+        return self._fp
 
     # ------------------------------------------------------- fault plane
 
@@ -109,6 +135,7 @@ class Topology:
         self._dist.clear()
         self._cand.clear()
         self._csr = None
+        self._fp = (self._struct_rev, frozenset(self._down))
 
     def set_switch_down(self, name: str, down: bool = True) -> None:
         """Fail (or restore) every link of a switch at once."""
@@ -121,6 +148,7 @@ class Topology:
         self._dist.clear()
         self._cand.clear()
         self._csr = None
+        self._fp = (self._struct_rev, frozenset(self._down))
 
     def is_down(self, node: str, port: int) -> bool:
         return (node, port) in self._down
@@ -133,6 +161,7 @@ class Topology:
         self._dist.clear()
         self._cand.clear()
         self._csr = None
+        self._fp = (self._struct_rev, frozenset())
 
     def down_links(self) -> frozenset:
         return frozenset(self._down)
@@ -151,28 +180,32 @@ class Topology:
             names = list(self.ports)
             index = {n: i for i, n in enumerate(names)}
             down = self._down
-            live = {n: [peer for p, (peer, _) in self.ports[n].items()
-                        if (n, p) not in down]
-                    for n in names} if down else None
+            # CSR entries keep the ports dict's insertion order, which
+            # is ascending port number by construction (``connect``
+            # allocates ports densely) — the same order ``sorted()``
+            # yields in candidate_ports, so vectorized ECMP picks over
+            # this CSR are bit-identical to the scalar walk.
+            live = {n: [(p, peer) for p, (peer, _) in self.ports[n].items()
+                        if not down or (n, p) not in down]
+                    for n in names}
             indptr = np.zeros(len(names) + 1, np.int32)
             for i, n in enumerate(names):
-                deg = len(live[n]) if down else len(self.ports[n])
-                indptr[i + 1] = indptr[i] + deg
+                indptr[i + 1] = indptr[i] + len(live[n])
             nbrs = np.empty(indptr[-1], np.int32)
+            prt = np.empty(indptr[-1], np.int32)
             k = 0
             for n in names:
-                peers = live[n] if down else [
-                    peer for _, (peer, _) in self.ports[n].items()]
-                for peer in peers:
+                for p, peer in live[n]:
                     nbrs[k] = index[peer]
+                    prt[k] = p
                     k += 1
-            self._csr = (names, index, indptr, nbrs)
+            self._csr = (names, index, indptr, nbrs, prt)
         return self._csr
 
     def _bfs(self, dst: str) -> Dict[str, int]:
         """Level-synchronous numpy BFS.  Unreachable nodes get -1 (the
         builders only produce connected topologies)."""
-        names, index, indptr, nbrs = self._adjacency()
+        names, index, indptr, nbrs, _ = self._adjacency()
         dist = np.full(len(names), -1, np.int32)
         frontier = np.asarray([index[dst]], np.int32)
         dist[frontier] = 0
@@ -192,12 +225,142 @@ class Topology:
             frontier = np.flatnonzero(dist == d).astype(np.int32)
         return dict(zip(names, dist.tolist()))
 
+    def _bfs_many(self, dst_ids: np.ndarray) -> np.ndarray:
+        """Hop counts to many destinations in ONE shared frontier sweep.
+
+        Returns a (K, N) int32 matrix, row k = distances to dst_ids[k]
+        (-1 where unreachable).  All K BFS expansions advance level by
+        level together, so the CSR gathers amortize across destinations
+        — the batched replacement for K scalar ``_bfs`` calls when
+        staging a whole sweep's groups at once.
+        """
+        names, index, indptr, nbrs, _ = self._adjacency()
+        N = len(names)
+        K = len(dst_ids)
+        dist = np.full((K, N), -1, np.int32)
+        fk = np.arange(K, dtype=np.int64)
+        fn = np.asarray(dst_ids, np.int64)
+        dist[fk, fn] = 0
+        d = 0
+        while fn.size:
+            d += 1
+            starts = indptr[fn].astype(np.int64)
+            counts = (indptr[fn + 1] - indptr[fn]).astype(np.int64)
+            total = int(counts.sum())
+            if not total:
+                break
+            rel = np.arange(total, dtype=np.int64) \
+                - np.repeat(np.cumsum(counts) - counts, counts)
+            cand_n = nbrs[np.repeat(starts, counts) + rel].astype(np.int64)
+            cand_k = np.repeat(fk, counts)
+            fresh = dist[cand_k, cand_n] < 0
+            if not fresh.any():
+                break
+            # dedupe (k, node) pairs discovered via several frontier
+            # nodes at once; unique also keeps the frontier sorted
+            flat = np.unique(cand_k[fresh] * N + cand_n[fresh])
+            fk = flat // N
+            fn = flat - fk * N
+            dist[fk, fn] = d
+        return dist
+
+    # destinations per batched-BFS chunk: bounds the (K, N) distance
+    # matrix (256 cols x ~17k nodes x int32 ~= 17MB on the 16k-host
+    # fat tree) while keeping the shared-frontier amortization
+    PATHS_CHUNK = 256
+
+    def paths_many(self, requests: Sequence[Tuple[str, str, int]]
+                   ) -> List[Tuple[Tuple[str, int], ...]]:
+        """Batch ``path_links`` over many (src, dst, flow_key) requests.
+
+        Destinations are grouped into chunks; each chunk runs one shared
+        ``_bfs_many`` sweep and then every request advances one hop per
+        vectorized step (padded candidate gather + masked ``flow_key %
+        n_cands`` pick).  Bit-identical to per-request ``path_links``
+        because the CSR preserves ascending-port candidate order and
+        excludes down links at build time.
+        """
+        if not requests:
+            return []
+        names, index, indptr, nbrs, prt = self._adjacency()
+        out: List[Optional[list]] = [None] * len(requests)
+        by_dst: Dict[str, List[int]] = {}
+        for i, (src, dst, key) in enumerate(requests):
+            if src == dst:
+                out[i] = []
+            else:
+                by_dst.setdefault(dst, []).append(i)
+        dst_names = sorted(by_dst)
+        max_deg = int(np.max(np.diff(indptr))) if len(names) else 0
+        deg_cols = np.arange(max_deg, dtype=np.int32)
+        for c0 in range(0, len(dst_names), self.PATHS_CHUNK):
+            chunk = dst_names[c0:c0 + self.PATHS_CHUNK]
+            dst_ids = np.asarray([index[d] for d in chunk], np.int32)
+            dist = self._bfs_many(dst_ids)
+            ridx: List[int] = []
+            cur: List[int] = []
+            col: List[int] = []
+            keys: List[int] = []
+            for k, dname in enumerate(chunk):
+                for i in by_dst[dname]:
+                    ridx.append(i)
+                    cur.append(index[requests[i][0]])
+                    col.append(k)
+                    keys.append(requests[i][2])
+                    out[i] = []
+            cur_a = np.asarray(cur, np.int64)
+            col_a = np.asarray(col, np.int64)
+            key_a = np.asarray(keys, np.int64)
+            tgt = dst_ids[col_a].astype(np.int64)
+            alive = np.flatnonzero(cur_a != tgt)
+            while alive.size:
+                n = cur_a[alive]
+                k = col_a[alive]
+                d = dist[k, n]
+                if (d < 0).any():
+                    bad = int(alive[np.flatnonzero(d < 0)[0]])
+                    i = ridx[bad]
+                    raise ValueError(
+                        f"{requests[i][1]!r} is unreachable from "
+                        f"{requests[i][0]!r}")
+                starts = indptr[n].astype(np.int64)
+                counts = (indptr[n + 1] - indptr[n]).astype(np.int64)
+                md = int(counts.max())
+                pad = deg_cols[:md]
+                gidx = np.where(pad[None, :] < counts[:, None],
+                                starts[:, None] + pad[None, :], 0)
+                valid = pad[None, :] < counts[:, None]
+                pn = nbrs[gidx].astype(np.int64)
+                cand = valid & (dist[k[:, None], pn] == (d - 1)[:, None])
+                ncand = cand.sum(axis=1)
+                if (ncand == 0).any():
+                    bad = int(alive[np.flatnonzero(ncand == 0)[0]])
+                    i = ridx[bad]
+                    raise ValueError(
+                        f"{requests[i][1]!r} is unreachable from "
+                        f"{requests[i][0]!r}")
+                pick = key_a[alive] % ncand
+                # index of the pick-th True per row, in CSR (port) order
+                sel = np.argmax(np.cumsum(cand, axis=1)
+                                == (pick + 1)[:, None], axis=1)
+                rows = np.arange(alive.size)
+                port_sel = prt[gidx[rows, sel]]
+                nxt = pn[rows, sel]
+                for r in range(alive.size):
+                    out[ridx[int(alive[r])]].append(
+                        (names[int(n[r])], int(port_sel[r])))
+                cur_a[alive] = nxt
+                alive = alive[nxt != tgt[alive]]
+        return [tuple(p) for p in out]
+
     def _dist_cache_cap(self) -> int:
         """Max cached distance maps within the memory budget (>= 64)."""
         per_map = max(len(self.ports), 1) * self._DIST_ENTRY_BYTES
         return max(self.DIST_CACHE_BYTES // per_map, 64)
 
     def dist(self, node: str, dst: str) -> int:
+        if not self.route_cache:
+            return self._bfs(dst)[node]
         d = self._dist.get(dst)
         if d is None:
             d = self._dist[dst] = self._bfs(dst)
@@ -208,26 +371,36 @@ class Topology:
             self._dist.move_to_end(dst)
         return d[node]
 
+    def _cand_cache_cap(self) -> int:
+        """Max cached candidate lists within the memory budget (>= 1k)."""
+        return max(self.CAND_CACHE_BYTES // self._CAND_ENTRY_BYTES, 1024)
+
     def candidate_ports(self, node: str, dst: str) -> List[int]:
         """All ports on shortest paths node -> dst (the ECMP set).
 
-        Memoized: staging a large-scale flow batch walks the same
-        (intermediate node, destination) pairs from many sources, and
-        each uncached call costs one ``dist`` lookup per port.
+        Memoized (LRU, byte-budgeted like ``dist``): staging a
+        large-scale flow batch walks the same (intermediate node,
+        destination) pairs from many sources, and each uncached call
+        costs one ``dist`` lookup per port.
         """
         if node == dst:
             return []
-        memo = self._cand.get((node, dst))
+        memo = self._cand.get((node, dst)) if self.route_cache else None
         if memo is None:
             d = self.dist(node, dst)
             if d < 0:
                 raise ValueError(f"{dst!r} is unreachable from {node!r}")
-            if len(self._cand) >= self.CAND_CACHE_ENTRIES:
-                self._cand.clear()              # coarse, rarely hit
-            memo = self._cand[(node, dst)] = [
+            memo = [
                 p for p, (peer, _) in sorted(self.ports[node].items())
                 if (node, p) not in self._down
                 and self.dist(peer, dst) == d - 1]
+            if self.route_cache:
+                self._cand[(node, dst)] = memo
+                cap = self._cand_cache_cap()
+                while len(self._cand) > cap:
+                    self._cand.popitem(last=False)
+        else:
+            self._cand.move_to_end((node, dst))
         return memo
 
     def next_hop_port(self, node: str, dst: str, flow_key: int = 0) -> int:

@@ -82,36 +82,67 @@ class LinkMap:
     bandwidth in bytes/s and ``delay[i]`` its propagation delay.
     """
 
-    def __init__(self, topo: Topology):
+    def __init__(self, topo: Topology, shared_cache: bool = True):
+        from repro.core.staging import StagingCache
         self.topo = topo
-        self.link_id: Dict[Tuple[str, int], int] = {}
-        caps: List[float] = []
-        delays: List[float] = []
-        lossy: List[float] = []
-        switches = set(topo.switches)
-        for (node, port), link in topo.links.items():
-            self.link_id[(node, port)] = len(caps)
-            caps.append(link.bw)
-            delays.append(link.delay)
-            # the packet engine drops only on switch egress (packetsim
-            # drops DATA iff from_switch), so host uplinks are lossless
-            lossy.append(1.0 if node in switches else 0.0)
-        self.cap = np.asarray(caps, float)
-        self.delay = np.asarray(delays, float)
-        self.lossy = np.asarray(lossy, float)
-        self._path_memo: Dict[Tuple[str, str, int], Tuple[int, ...]] = {}
+        # routed-path artifacts live in the topology's shared staging
+        # cache so sweeps across engine instances derive each path once.
+        # ``shared_cache=False`` keeps a private cache — the reference
+        # mode for the cache-on/off bit-identity tests.  The link-id
+        # assignment below is a pure function of the topology's links
+        # dict (insertion-ordered), so cached id tuples are valid across
+        # LinkMap instances; any ``connect`` bumps the fingerprint and
+        # drops them.
+        self.cache = StagingCache.of(topo) if shared_cache \
+            else StagingCache(topo)
+        arrays = self.cache.sync().misc.get("linkmap")
+        if arrays is None:
+            link_id: Dict[Tuple[str, int], int] = {}
+            caps: List[float] = []
+            delays: List[float] = []
+            lossy: List[float] = []
+            switches = set(topo.switches)
+            for (node, port), link in topo.links.items():
+                link_id[(node, port)] = len(caps)
+                caps.append(link.bw)
+                delays.append(link.delay)
+                # the packet engine drops only on switch egress (packetsim
+                # drops DATA iff from_switch), so host uplinks are lossless
+                lossy.append(1.0 if node in switches else 0.0)
+            arrays = (link_id, np.asarray(caps, float),
+                      np.asarray(delays, float), np.asarray(lossy, float))
+            self.cache.misc["linkmap"] = arrays
+        self.link_id, self.cap, self.delay, self.lossy = arrays
+
+    def add_many(self, rows) -> List["Flow"]:
+        """Bulk ``add``: one Flow per (links, volume, loss) row, in
+        order.  Staged layouts already carry immutable link tuples, so
+        the per-call defensive ``tuple()`` copy is skipped for them —
+        the fleet sweep stages thousands of flows per epoch and the
+        per-flow call overhead is measurable."""
+        flows = [Flow(links if type(links) is tuple else tuple(links),
+                      float(volume), loss=loss)
+                 for links, volume, loss in rows]
+        self.flows.extend(flows)
+        return flows
 
     def unicast_links(self, src: str, dst: str, key: int = 0):
         """Directed link ids along the ECMP unicast path src -> dst.
 
-        Memoized: large-scale staging (fig14 meshes both tree links AND
-        per-receiver latency paths) asks for the same pair repeatedly.
+        Memoized in the shared staging cache: large-scale staging
+        (fig14 meshes both tree links AND per-receiver latency paths)
+        asks for the same pair repeatedly, and `run_many` sweeps ask
+        again per scenario.
         """
-        memo = self._path_memo.get((src, dst, key))
+        cache = self.cache.sync()
+        memo = cache.paths.get((src, dst, key))
         if memo is None:
-            memo = self._path_memo[(src, dst, key)] = tuple(
+            cache.misses += 1
+            memo = cache.paths[(src, dst, key)] = tuple(
                 self.link_id[hop]
                 for hop in self.topo.path_links(src, dst, key))
+        else:
+            cache.hits += 1
         return memo
 
     def multicast_tree_links(self, src: str, members: Sequence[str],
@@ -119,12 +150,85 @@ class LinkMap:
         """Union of unicast paths source -> members; reusing a port = the
         forwarded-entry reuse of Algorithm 4 (one copy per tree link).
         `key` seeds the ECMP choice — distinct groups spread over distinct
-        spine planes (Algorithm 4's group-level load balancing)."""
-        links = set()
-        for m in members:
-            if m != src:
-                links.update(self.unicast_links(src, m, key))
-        return tuple(sorted(links))
+        spine planes (Algorithm 4's group-level load balancing).
+        Memoized on (source, member frozenset, key)."""
+        cache = self.cache.sync()
+        mk = (src, frozenset(members), key)
+        memo = cache.trees.get(mk)
+        if memo is None:
+            cache.misses += 1
+            links = set()
+            for m in members:
+                if m != src:
+                    links.update(self.unicast_links(src, m, key))
+            memo = cache.trees[mk] = tuple(sorted(links))
+        else:
+            cache.hits += 1
+        return memo
+
+    def warm_paths(self, requests: Sequence[Tuple[str, str, int]]) -> None:
+        """Batch-derive many unicast paths into the staging cache.
+
+        Deduplicates against cached entries and hands the misses to
+        ``Topology.paths_many`` — one shared frontier sweep per
+        destination chunk instead of one Python BFS walk per pair.
+        Bit-identical to per-pair ``unicast_links`` by construction.
+        """
+        cache = self.cache.sync()
+        missing = sorted({r for r in requests if r not in cache.paths})
+        if not missing:
+            return
+        cache.misses += len(missing)
+        hop_lists = self.topo.paths_many(missing)
+        link_id = self.link_id
+        for req, hops in zip(missing, hop_lists):
+            cache.paths[req] = tuple(link_id[h] for h in hops)
+        cache.bound()
+
+    def warm_latencies(self, requests) -> None:
+        """Batch-fill the latency cache for (src, dst, seg_wire, key)
+        requests whose paths are already cached (see ``warm_paths``).
+
+        The per-segment reductions run in the same left-to-right order
+        as the scalar ``FlowEngine._path_latency`` sums, so warmed
+        entries are bit-identical to lazily computed ones.
+        """
+        cache = self.cache.sync()
+        missing = [r for r in requests if r not in cache.lat]
+        if not missing:
+            return
+        ids_list = [cache.paths.get((s, d, k)) for (s, d, _, k) in missing]
+        lazy = [i for i, ids in enumerate(ids_list) if ids is None]
+        if lazy:
+            self.warm_paths([(missing[i][0], missing[i][1], missing[i][3])
+                             for i in lazy])
+            for i in lazy:
+                s, d, _, k = missing[i]
+                ids_list[i] = cache.paths[(s, d, k)]
+        lens = np.fromiter((len(x) for x in ids_list), np.int64,
+                           len(ids_list))
+        total = int(lens.sum())
+        if not total:
+            for req in missing:
+                cache.lat[req] = (0.0, 0.0)
+            return
+        flat = np.fromiter((i for x in ids_list for i in x), np.int64,
+                           total)
+        starts = np.cumsum(lens) - lens
+        segs = np.fromiter((r[2] for r in missing), float, len(missing))
+        delays = self.delay[flat]
+        # store-and-forward terms seg/cap per hop, first hop zeroed (its
+        # serialization is part of the message wire time)
+        sf_terms = np.repeat(segs, lens) / self.cap[flat]
+        sf_terms[starts[lens > 0]] = 0.0
+        nz = lens > 0
+        prop = np.zeros(len(missing))
+        sf = np.zeros(len(missing))
+        prop[nz] = np.add.reduceat(delays, starts[nz])
+        sf[nz] = np.add.reduceat(sf_terms, starts[nz])
+        for req, p, s in zip(missing, prop, sf):
+            cache.lat[req] = (float(p + s), float(p))
+        cache.bound()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,7 +280,7 @@ class LossParams:
                    ecn=bool(ecn))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Flow:
     """One staged flow.  ``volume`` is the STAGED byte count and is
     never mutated by the solvers — metrics and re-run inspection rely
@@ -238,8 +342,8 @@ def static_maxmin(cap: np.ndarray, link_sets: Sequence[Sequence[int]]):
 
 
 class FlowSim(LinkMap):
-    def __init__(self, topo: Topology):
-        super().__init__(topo)
+    def __init__(self, topo: Topology, shared_cache: bool = True):
+        super().__init__(topo, shared_cache)
         self.flows: List[Flow] = []
         self.now = 0.0
 

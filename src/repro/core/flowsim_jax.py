@@ -244,10 +244,10 @@ class JaxFlowSim(LinkMap):
     F_BUCKET_MIN = 16
     H_BUCKET_MIN = 8
 
-    def __init__(self, topo: Topology):
+    def __init__(self, topo: Topology, shared_cache: bool = True):
         if not HAS_JAX:
             raise RuntimeError("JaxFlowSim needs jax; use flowsim.FlowSim")
-        super().__init__(topo)
+        super().__init__(topo, shared_cache)
         _enable_persistent_cache()
         self.flows: List[Flow] = []
         self.now = 0.0
@@ -271,11 +271,21 @@ class JaxFlowSim(LinkMap):
         """(f_pad, h_pad) link-id matrix + (f_pad,) volumes; padding
         rows/columns point at the infinite-capacity sentinel link."""
         sentinel = len(self.cap)
+        n = len(flows)
         fl = np.full((f_pad, h_pad), sentinel, np.int32)
         vol = np.zeros(f_pad, dtype)
-        for i, f in enumerate(flows):
-            fl[i, :len(f.links)] = f.links
-            vol[i] = f.volume
+        if n:
+            # one flat scatter instead of a per-flow Python row loop —
+            # packing a 32k-flow unicast mesh is staging-path work
+            lens = np.fromiter((len(f.links) for f in flows), np.int64, n)
+            total = int(lens.sum())
+            flat = np.fromiter((l for f in flows for l in f.links),
+                               np.int32, total)
+            rows = np.repeat(np.arange(n), lens)
+            cols = np.arange(total) - np.repeat(np.cumsum(lens) - lens,
+                                                lens)
+            fl[rows, cols] = flat
+            vol[:n] = np.fromiter((f.volume for f in flows), np.float64, n)
         return fl, vol
 
     def _shape(self, flows: Sequence[Flow]):
@@ -294,13 +304,14 @@ class JaxFlowSim(LinkMap):
         fine.
         """
         arrs = np.zeros((4, f_pad), dtype)
-        for i, f in enumerate(flows):
-            lp = f.loss
-            if lp is not None:
-                arrs[0, i] = lp.q
-                arrs[1, i] = lp.wsq
-                arrs[2, i] = lp.wnd
-                arrs[3, i] = 1.0 if lp.ecn else 0.0
+        lossy = [(i, f.loss) for i, f in enumerate(flows)
+                 if f.loss is not None]
+        if lossy:
+            ii = np.fromiter((i for i, _ in lossy), np.int64, len(lossy))
+            arrs[0, ii] = [lp.q for _, lp in lossy]
+            arrs[1, ii] = [lp.wsq for _, lp in lossy]
+            arrs[2, ii] = [lp.wnd for _, lp in lossy]
+            arrs[3, ii] = [1.0 if lp.ecn else 0.0 for _, lp in lossy]
         return tuple(arrs)
 
     def _cap_ext(self, dtype):
@@ -337,12 +348,19 @@ class JaxFlowSim(LinkMap):
         it delays the completion timestamp without occupying fabric
         time in the solve (the bandwidth is free during the stall).
         """
+        n = len(flows)
+        # one float64 conversion + tolist() instead of a per-flow
+        # float() call; the loss-tail add stays scalar per lossy flow
+        # so the float addition order matches the original exactly
+        dts = np.asarray(done[:n], np.float64).tolist()
         end = 0.0
-        for f, d in zip(flows, done):
-            f.done_t = float(d) + \
-                (f.loss.tail if f.loss is not None else 0.0)
+        for f, d in zip(flows, dts):
+            if f.loss is not None:
+                d += f.loss.tail
+            f.done_t = d
             f.remaining = 0.0
-            end = max(end, f.done_t)
+            if d > end:
+                end = d
         return end
 
     def run(self) -> float:
@@ -362,7 +380,7 @@ class JaxFlowSim(LinkMap):
 
     # ------------------------------------------------------- batched solve
 
-    def _plan_batches(self, epochs, indices):
+    def _plan_batches(self, epochs, indices, shapes=None):
         """Group epoch ``indices`` into padded stacks.
 
         Two constraints per batch: stay under ``MAX_BATCH_BYTES``, and
@@ -371,12 +389,13 @@ class JaxFlowSim(LinkMap):
         unicast mesh (H ~ 8) is never padded to a multicast epoch's hop
         count (H ~ hundreds) or vice versa.  Epochs are sorted by H
         bucket first, which makes shape-compatible epochs adjacent."""
-        shaped = sorted(indices,
-                        key=lambda i: self._shape(epochs[i])[::-1])
+        if shapes is None:
+            shapes = {i: self._shape(epochs[i]) for i in indices}
+        shaped = sorted(indices, key=lambda i: shapes[i][::-1])
         batches, cur = [], []
         f_max = h_max = own = 0
         for i in shaped:
-            f, h = self._shape(epochs[i])
+            f, h = shapes[i]
             nf, nh = max(f_max, f), max(h_max, h)
             ne = len(cur) + 1
             if cur and (ne * nf * nh * 4 > MAX_BATCH_BYTES
@@ -404,16 +423,17 @@ class JaxFlowSim(LinkMap):
         nonempty = [i for i, ep in enumerate(epochs) if ep]
         if not nonempty:
             return out
-        dtype = self._select_dtype(
-            [f for i in nonempty for f in epochs[i]])
+        vmax = max(max(f.volume for f in epochs[i]) for i in nonempty)
+        dtype = np.float64 if vmax > F32_SAFE_MAX else np.float32
         self.solve_dtype = dtype
         cap = self._cap_ext(dtype)
-        batches = self._plan_batches(epochs, nonempty)
+        shapes = {i: self._shape(epochs[i]) for i in nonempty}
+        batches = self._plan_batches(epochs, nonempty, shapes)
 
         def solve_batch(batch):
             f_pad = h_pad = 0
             for i in batch:
-                f, h = self._shape(epochs[i])
+                f, h = shapes[i]
                 f_pad, h_pad = max(f_pad, f), max(h_pad, h)
             packed = [self._pack(epochs[i], dtype, f_pad, h_pad)
                       for i in batch]

@@ -30,7 +30,7 @@ import math
 from typing import Dict, Iterable, Sequence
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class MsgRecord:
     """Completion bookkeeping for one submitted group message.
 

@@ -1,0 +1,109 @@
+"""Shared staging cache — the fleet-scale sweep plane's artifact store.
+
+Staging (tree derivation, path walks, per-receiver latencies, per-op
+flow layouts) is the flow engine's hot path once the solver is batched:
+a `run_many` sweep across seeds/loss-points/arrival-draws re-derives
+each group's artifacts per scenario unless they are cached.  One
+``StagingCache`` lives on each ``Topology`` (``StagingCache.of``), so
+every engine instance built over the same fabric — including the fresh
+engines a benchmark builds per pass — shares one set of derived
+artifacts.
+
+Keying and invalidation rules (docs/ARCHITECTURE.md "Fleet-scale sweep
+plane"):
+
+- every artifact is implicitly keyed by ``Topology.fingerprint()`` —
+  the (structural revision, frozen down-set) pair.  ``sync()`` compares
+  the stored fingerprint against the topology's current one and drops
+  EVERYTHING on mismatch, so ``connect``/``set_link_down``/
+  ``set_switch_down``/``clear_down`` invalidate by construction.
+  The fingerprint is state-based, not a mutation counter: a transient
+  down/up round trip (flow-engine fault staging) restores the original
+  fingerprint and the pristine artifacts survive.
+- ``paths``  : (src, dst, ecmp key)            -> directed link ids
+- ``trees``  : (source, member frozenset, key) -> multicast tree links
+- ``lat``    : (src, dst, seg_wire, key)       -> (latency, return prop)
+- ``ops``    : engine-config-prefixed per-op layouts (links, deliver
+  map, loss params) for STATIC ops only — ops with membership events or
+  faults re-derive every time (their staging mutates the down-set
+  mid-op, and their artifacts are timeline-dependent).
+- ``misc``   : small derived singletons (the LinkMap link-id/capacity
+  arrays) keyed by an arbitrary string; same invalidation rules.
+
+Entries are plain derived values; nothing downstream mutates them
+(``FlowEngine._backfill`` reads deliver maps read-only), which is what
+makes fixed-seed results bit-identical with the cache on or off — the
+guarantee ``tests/test_staging.py`` pins down.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.core.fattree import Topology
+
+# coarse safety valve: artifact dicts are cleared wholesale when any one
+# of them exceeds this many entries (a 16k-host x 1k-group sweep stages
+# ~20k paths; the cap only trips on degenerate churn)
+MAX_ENTRIES = 1 << 20
+
+
+class StagingCache:
+    """Per-topology store of derived staging artifacts (see module doc)."""
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self._fp = topo.fingerprint()
+        self.paths: Dict[tuple, Tuple[int, ...]] = {}
+        self.trees: Dict[tuple, Tuple[int, ...]] = {}
+        self.lat: Dict[tuple, Tuple[float, float]] = {}
+        self.ops: Dict[tuple, tuple] = {}
+        self.misc: Dict[str, object] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    @classmethod
+    def of(cls, topo: Topology) -> "StagingCache":
+        """The topology's shared cache (created on first use)."""
+        cache = getattr(topo, "_staging_cache", None)
+        if cache is None:
+            cache = topo._staging_cache = cls(topo)
+        return cache
+
+    # --------------------------------------------------------- lifecycle
+
+    def sync(self) -> "StagingCache":
+        """Drop every artifact if the topology fingerprint moved."""
+        if self.topo.fingerprint() != self._fp:
+            self.invalidate()
+        return self
+
+    def invalidate(self) -> None:
+        self.paths.clear()
+        self.trees.clear()
+        self.lat.clear()
+        self.ops.clear()
+        self.misc.clear()
+        self._fp = self.topo.fingerprint()
+        self.invalidations += 1
+
+    def bound(self) -> None:
+        """Coarse entry-count safety valve (see MAX_ENTRIES)."""
+        if max(len(self.paths), len(self.trees), len(self.lat),
+               len(self.ops)) > MAX_ENTRIES:
+            self.invalidate()
+
+    # --------------------------------------------------------- telemetry
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "invalidations": self.invalidations,
+            "paths": len(self.paths),
+            "trees": len(self.trees),
+            "lat": len(self.lat),
+            "ops": len(self.ops),
+        }

@@ -532,11 +532,33 @@ class Workload:
                    meta=dict(d.get("meta", {})))
 
 
+# relay_plan memo: staging sweeps re-plan the same (transport, member
+# tuple) constantly.  Keyed by transport identity (the object is held in
+# the value, so a recycled id() can never alias a dead transport);
+# coarse-cleared past the cap.
+_PLAN_MEMO: Dict[tuple, tuple] = {}
+_PLAN_MEMO_ENTRIES = 1 << 16
+
+
 def relay_plan(transport: Transport, members: Sequence[str]
                ) -> List[Tuple[str, str, int]]:
     """Lowered overlay schedule: ``(parent, child, hops_from_source)``
     per relay edge, hops computed by walking the edge list's parent
-    chain — any registered transport only has to provide edges."""
+    chain — any registered transport only has to provide edges.
+    Memoized; each call returns a fresh list."""
+    key = (id(transport), tuple(members))
+    hit = _PLAN_MEMO.get(key)
+    if hit is not None and hit[0] is transport:
+        return list(hit[1])
+    plan = _relay_plan_uncached(transport, members)
+    if len(_PLAN_MEMO) >= _PLAN_MEMO_ENTRIES:
+        _PLAN_MEMO.clear()
+    _PLAN_MEMO[key] = (transport, plan)
+    return list(plan)
+
+
+def _relay_plan_uncached(transport: Transport, members: Sequence[str]
+                         ) -> List[Tuple[str, str, int]]:
     edges = transport.relay_edges(members)
     parent = {b: a for a, b in edges}
     hops: Dict[str, int] = {members[0]: 0}

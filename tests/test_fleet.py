@@ -1,0 +1,159 @@
+"""Multi-tenant fleet plane: workload builder, SLO metrics, census.
+
+Contracts under test (apps/fleet.py):
+
+- the seeded workload builder is deterministic per spec and actually
+  makes tenants' trees overlap;
+- per-tenant quantiles are monotone (p50 <= p99 <= p999 <= latency)
+  and partition the op set;
+- the flow engines' ANALYTIC connection census agrees exactly with the
+  packet engine's MEASURED per-host QP counts (same reuse rules), and
+  on aggregate MFT group occupancy;
+- packet and flow engines agree on per-tenant SLOs within the fleet
+  gate's 10% envelope at bandwidth-dominated sizes;
+- a fleet sweep exercises the staging cache (hit rate > 0 and growing
+  on a second pass over the same fabric).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.apps.fleet import (FleetSpec, connection_census, fleet_workload,
+                              mft_pressure_report, run_fleet,
+                              tenant_quantiles)
+from repro.core import fattree
+
+
+def fabric():
+    return fattree.fat_tree(n_pods=2, leaves_per_pod=2, hosts_per_leaf=4,
+                            aggs_per_pod=2, bw=100 * fattree.GBPS)
+
+
+SPEC = FleetSpec(n_tenants=3, groups_per_tenant=2, group_size=5,
+                 nbytes=4 << 20, bg_unicasts=6, bg_incasts=1,
+                 bg_fan_in=3, bg_nbytes=2 << 20, seed=0)
+
+
+def test_fleet_workload_deterministic_and_overlapping():
+    hosts = fabric().hosts
+    wl1, wl2 = fleet_workload(hosts, SPEC), fleet_workload(hosts, SPEC)
+    assert [(o.op, o.members, o.nbytes, o.phase) for o in wl1.ops] == \
+        [(o.op, o.members, o.nbytes, o.phase) for o in wl2.ops]
+    other = fleet_workload(hosts, FleetSpec(**{
+        **{f.name: getattr(SPEC, f.name)
+           for f in SPEC.__dataclass_fields__.values()}, "seed": 1}))
+    assert [o.members for o in other.ops] != [o.members for o in wl1.ops]
+    # tenants' member sets overlap (fabric sharing is the scenario)
+    groups = [set(o.members) for o in wl1.ops if o.op == "bcast"]
+    assert any(a & b for i, a in enumerate(groups)
+               for b in groups[i + 1:])
+    n_mcast = SPEC.n_tenants * SPEC.groups_per_tenant
+    n_uni = SPEC.bg_unicasts + SPEC.bg_incasts * SPEC.bg_fan_in
+    assert len(wl1.ops) == n_mcast + n_uni
+
+
+def test_fleet_workload_rejects_tiny_fabric():
+    with pytest.raises(ValueError):
+        fleet_workload(["a", "b", "c"], SPEC)
+    with pytest.raises(ValueError):
+        FleetSpec(group_size=1)
+
+
+def test_tenant_quantiles_monotone_and_partitioning():
+    report = run_fleet("flow", fabric(), SPEC)
+    tenants = report["tenants"]
+    phases = {SPEC.tenant_phase(t) for t in range(SPEC.n_tenants)}
+    assert phases | {"bg-mesh", "bg-incast"} == set(tenants)
+    for q in tenants.values():
+        assert 0.0 < q["p50"] <= q["p99"] <= q["p999"] <= q["latency"]
+    assert sum(q["n_ops"] for q in tenants.values()) == \
+        len(fleet_workload(fabric().hosts, SPEC).ops)
+    assert report["errors"] == 0
+
+
+def test_census_flow_analytic_matches_packet_measured():
+    """The analytic census mirrors the packet engine's connection reuse
+    rules — per-host QP counts must agree EXACTLY, as must aggregate
+    MFT group occupancy (per-switch splits may differ: envelope-flooded
+    installs vs geometric trees)."""
+    rf = run_fleet("flow", fabric(), SPEC)
+    rp = run_fleet("packet", fabric(), SPEC, seed=1)
+    cf, cp = rf["census"], rp["census"]
+    assert not cf["measured"] and cp["measured"]
+    assert cf["qp_per_host"] == cp["qp_per_host"]
+    assert cf["qp_total"] == cp["qp_total"] > 0
+    assert cf["nic_qp_peak"] == cp["nic_qp_peak"]
+    assert cf["mft_groups_total"] == cp["mft_groups_total"] > 0
+    assert cp["mft_evictions"] == 0          # fabric not under pressure
+    assert cf["mft_bytes_total"] > 0 and cp["mft_bytes_total"] > 0
+
+
+def test_census_reuse_rules():
+    """Duplicate member sets / unicast pairs must not double-count."""
+    topo = fabric()
+    hosts = topo.hosts
+    from repro.core.workload import Workload
+    wl = Workload("dup")
+    wl.bcast(hosts[:5], 1 << 20, key=0)
+    wl.bcast(hosts[:5], 1 << 20, key=0)      # same group, reused
+    wl.unicast(hosts[5], hosts[6], 1 << 20)
+    wl.unicast(hosts[5], hosts[6], 1 << 20)  # same channel, reused
+    from repro.core.engine import make_engine
+    eng = make_engine("flow", topo)
+    eng.run_workloads([wl])
+    census = connection_census(eng, wl)
+    assert census["qp_per_host"][hosts[0]] == 1
+    assert census["qp_per_host"][hosts[5]] == 1
+    assert census["qp_per_host"][hosts[6]] == 1
+    assert census["qp_total"] == 7           # 5 group members + RC pair
+    # and the packet engine agrees on the same reuse
+    peng = make_engine("packet", fabric(), seed=1)
+    wl2 = Workload("dup")
+    wl2.bcast(hosts[:5], 1 << 20, key=0)
+    wl2.bcast(hosts[:5], 1 << 20, key=0)
+    wl2.unicast(hosts[5], hosts[6], 1 << 20)
+    wl2.unicast(hosts[5], hosts[6], 1 << 20)
+    peng.run_workloads([wl2])
+    assert connection_census(peng)["qp_per_host"] == \
+        census["qp_per_host"]
+
+
+def test_packet_vs_flow_slo_parity():
+    rf = run_fleet("flow", fabric(), SPEC)
+    rp = run_fleet("packet", fabric(), SPEC, seed=1)
+    for phase, qf in rf["tenants"].items():
+        a, b = qf["latency"], rp["tenants"][phase]["latency"]
+        assert abs(a - b) / max(a, b) <= 0.10, (phase, a, b)
+
+
+def test_fleet_staging_cache_hits():
+    topo = fabric()
+    r1 = run_fleet("flow", topo, SPEC)
+    assert r1["staging"]["hits"] > 0
+    r2 = run_fleet("flow", topo, SPEC)       # same fabric: warm
+    assert r2["staging"]["hit_rate"] > r1["staging"]["hit_rate"]
+    assert r2["tenants"] == r1["tenants"]    # and bit-identical
+
+
+def test_mft_pressure_registration_churn():
+    """LRU pressure: churning more registrations through the fabric
+    than the tables can hold evicts, stays within capacity everywhere,
+    and the NEWEST group still broadcasts end to end."""
+    pr = mft_pressure_report(fabric(), n_groups=24, group_size=5,
+                             capacity=4, seed=1)
+    assert pr["evictions"] > 0
+    assert 0 < pr["occupancy_peak"] <= 4
+    for s in pr["switches"].values():
+        assert s["occupancy"] <= s["capacity"] == 4
+    assert pr["last_group_ok"]
+    assert pr["last_group_jct"] > 0
+
+
+def test_flow_backends_agree():
+    r_jax = run_fleet("flow", fabric(), SPEC)
+    r_np = run_fleet("flow-np", fabric(), SPEC)
+    for phase, q in r_jax["tenants"].items():
+        for k in ("p50", "p99", "latency"):
+            assert q[k] == pytest.approx(r_np["tenants"][phase][k],
+                                         rel=1e-6)
+    assert r_jax["census"] == r_np["census"]

@@ -1,0 +1,252 @@
+"""Fleet-scale sweep plane: staging cache + vectorized path derivation.
+
+The staging cache (core/staging.py) memoizes derived artifacts —
+unicast paths, multicast tree edges, per-receiver latencies, per-op
+flow layouts — on the topology, keyed by its (structural revision,
+down-set) fingerprint.  The contract under test:
+
+- fixed-seed results are BIT-identical with the cache enabled or
+  disabled, on both flow backends, for every transport — including a
+  sweep whose fault op forces a mid-sweep invalidation;
+- `Topology.paths_many` (batched CSR frontier sweep) returns exactly
+  what the scalar `path_links` walk returns, downed links included;
+- fingerprint semantics: `connect` invalidates, a transient
+  down/clear round trip does NOT (fault staging relies on this), a
+  persistent down DOES;
+- the `candidate_ports` memo stays under its byte budget no matter how
+  many destinations churn through it;
+- the packet engine's `staging_cache=False` mode disables the routing
+  memos without changing results.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import fattree
+from repro.core.engine import FlowEngine, PacketEngine, make_engine
+from repro.core.faults import FaultEvent
+from repro.core.staging import StagingCache
+from repro.core.workload import GroupOp, MemberEvent, Workload
+
+def small_fat_tree():
+    return fattree.fat_tree(n_pods=2, leaves_per_pod=2, hosts_per_leaf=4,
+                            aggs_per_pod=2, bw=100 * fattree.GBPS)
+
+
+def leaf_of(topo, host):
+    """The switch a host hangs off (hosts have exactly one port)."""
+    return topo.ports[host][0][0]
+
+
+def sweep_workloads(hosts):
+    """A representative static sweep: every transport + unicast mesh."""
+    wls = []
+    for transport in ("gleam", "ring", "binary-tree", "multiunicast"):
+        wl = Workload(f"sweep/{transport}")
+        wl.bcast(hosts[:6], 1 << 20, transport=transport, key=3)
+        wl.bcast(hosts[2:9], 256 << 10, transport=transport)
+        wls.append(wl)
+    mesh = Workload("sweep/mesh")
+    for i in range(4):
+        mesh.unicast(hosts[i], hosts[(i + 3) % 8], 512 << 10, key=i)
+    mesh.allreduce(hosts[:5], 1 << 20)
+    wls.append(mesh)
+    return wls
+
+
+def record_tuples(recss):
+    return [[(r.msg_id, r.t_submit, r.t_sender_cqe,
+              tuple(sorted(r.t_deliver.items())), r.error)
+             for r in recs] for recs in recss]
+
+
+# ===================================================== vectorized routing
+
+def test_paths_many_matches_scalar_walk():
+    topo = small_fat_tree()
+    reqs = [(src, dst, key)
+            for src in topo.hosts[:4]
+            for dst in topo.hosts[4:10]
+            for key in (0, 1, 7)]
+    batched = topo.paths_many(reqs)
+    for (src, dst, key), hops in zip(reqs, batched):
+        assert hops == tuple(topo.path_links(src, dst, key))
+
+
+def test_paths_many_respects_downed_links():
+    topo = small_fat_tree()
+    # take down one leaf->agg uplink; paths must detour identically
+    leaf = leaf_of(topo, topo.hosts[0])
+    switches = set(topo.switches)
+    agg = next(peer for _, (peer, _) in sorted(topo.ports[leaf].items())
+               if peer in switches)
+    topo.set_link_down(leaf, agg, True)
+    reqs = [(topo.hosts[0], dst, k) for dst in topo.hosts[8:16]
+            for k in (0, 1)]
+    batched = topo.paths_many(reqs)
+    for (src, dst, key), hops in zip(reqs, batched):
+        assert hops == tuple(topo.path_links(src, dst, key))
+
+
+def test_paths_many_raises_on_unreachable():
+    topo = small_fat_tree()
+    with pytest.raises(KeyError):
+        topo.paths_many([(topo.hosts[0], "nonexistent-host", 0)])
+    # an isolated destination (its only link downed) is unreachable
+    iso = topo.hosts[-1]
+    topo.set_link_down(iso, leaf_of(topo, iso), True)
+    with pytest.raises(ValueError):
+        topo.paths_many([(topo.hosts[0], iso, 0)])
+
+
+# ==================================================== cache-off = cache-on
+
+@pytest.mark.parametrize("backend", ["flow", "flow-np"])
+def test_flow_bit_identity_cache_on_vs_off(backend):
+    t_on, t_off = small_fat_tree(), small_fat_tree()
+    wls = sweep_workloads(t_on.hosts)
+    on = make_engine(backend, t_on, staging_cache=True)
+    off = make_engine(backend, t_off, staging_cache=False)
+    r_on = record_tuples(on.run_workloads(wls))
+    r_off = record_tuples(off.run_workloads(wls))
+    assert r_on == r_off
+    stats = on.staging_stats()
+    assert stats["misses"] > 0
+    # second pass over the SAME topology must hit and stay identical
+    on2 = make_engine(backend, t_on, staging_cache=True)
+    assert record_tuples(on2.run_workloads(wls)) == r_on
+    assert on2.staging_stats()["hit_rate"] > 0.5
+
+
+@pytest.mark.parametrize("backend", ["flow", "flow-np"])
+def test_flow_bit_identity_with_fault_invalidation_mid_sweep(backend):
+    """A sweep mixing static ops, a fault op, and a persistent topology
+    change between runs: cache-on must equal cache-off throughout."""
+    t_on, t_off = small_fat_tree(), small_fat_tree()
+    hosts = t_on.hosts
+
+    def wls():
+        wl1 = Workload("pre")
+        wl1.bcast(hosts[:6], 1 << 20, key=1)
+        leaf = leaf_of(t_on, hosts[1])
+        switches = set(t_on.switches)
+        agg = next(peer for _, (peer, _) in
+                   sorted(t_on.ports[leaf].items()) if peer in switches)
+        wl2 = Workload("faulty")
+        wl2.bcast(hosts[:6], 1 << 20, key=1, faults=(
+            FaultEvent("link_down", 2e-5, node=leaf, peer=agg),))
+        wl3 = Workload("dynamic")
+        wl3.bcast(hosts[:5], 1 << 20, events=(
+            MemberEvent("join", hosts[6], 1e-5),))
+        return [wl1, wl2, wl3]
+
+    on = make_engine(backend, t_on, staging_cache=True)
+    off = make_engine(backend, t_off, staging_cache=False)
+    assert record_tuples(on.run_workloads(wls())) == \
+        record_tuples(off.run_workloads(wls()))
+
+    # persistent fabric change: shared cache must invalidate, results
+    # must still agree
+    for topo in (t_on, t_off):
+        topo.set_link_down(topo.hosts[2], leaf_of(topo, topo.hosts[2]),
+                           True)
+    inv0 = StagingCache.of(t_on).invalidations
+    on2 = make_engine(backend, t_on, staging_cache=True)
+    off2 = make_engine(backend, t_off, staging_cache=False)
+    wl = Workload("post")
+    wl.bcast(hosts[:2] + hosts[3:6], 1 << 20, key=1)
+    assert record_tuples(on2.run_workloads([wl])) == \
+        record_tuples(off2.run_workloads([wl]))
+    assert StagingCache.of(t_on).invalidations > inv0
+
+
+def test_packet_engine_route_cache_off_bit_identity():
+    t_on, t_off = small_fat_tree(), small_fat_tree()
+    wl = Workload("pkt")
+    wl.bcast(t_on.hosts[:5], 256 << 10, key=2)
+    wl.unicast(t_on.hosts[5], t_on.hosts[1], 64 << 10)
+    on = PacketEngine(t_on, seed=7, staging_cache=True)
+    off = PacketEngine(t_off, seed=7, staging_cache=False)
+    wl2 = Workload("pkt")
+    wl2.bcast(t_off.hosts[:5], 256 << 10, key=2)
+    wl2.unicast(t_off.hosts[5], t_off.hosts[1], 64 << 10)
+    assert record_tuples(on.run_workloads([wl])) == \
+        record_tuples(off.run_workloads([wl2]))
+    assert t_on.route_cache and not t_off.route_cache
+
+
+# ======================================================= fingerprint rules
+
+def test_fingerprint_transient_fault_round_trip_preserves_cache():
+    topo = small_fat_tree()
+    eng = FlowEngine(topo)
+    wl = Workload("w")
+    wl.bcast(topo.hosts[:6], 1 << 20)
+    eng.run_workloads([wl])
+    cache = StagingCache.of(topo)
+    n_paths, inv0 = len(cache.paths), cache.invalidations
+    assert n_paths > 0
+    fp = topo.fingerprint()
+    topo.set_link_down(topo.hosts[0], leaf_of(topo, topo.hosts[0]), True)
+    assert topo.fingerprint() != fp
+    topo.clear_down()
+    assert topo.fingerprint() == fp          # state-based, not a counter
+    eng2 = FlowEngine(topo)
+    eng2.run_workloads([wl])
+    assert cache.invalidations == inv0       # artifacts survived
+    assert len(cache.paths) == n_paths
+
+
+def test_fingerprint_connect_invalidates():
+    topo = small_fat_tree()
+    cache = StagingCache.of(topo)
+    cache.paths[("x", "y", 0)] = (1, 2)
+    topo.add_host("h-extra")
+    topo.connect("h-extra", topo.switches[0], bw=100 * fattree.GBPS,
+                 delay=1e-6)
+    assert cache.sync().paths == {}
+    assert cache.invalidations == 1
+
+
+# ==================================================== candidate_ports memo
+
+def test_candidate_ports_memo_stays_under_byte_budget():
+    """Regression: many-destination churn (every host pairs with every
+    other) keeps the memo at its byte-budget cap, evicting LRU —
+    unbounded growth was the pre-budget failure mode."""
+    topo = fattree.fat_tree(n_pods=4, leaves_per_pod=4, hosts_per_leaf=4,
+                            aggs_per_pod=4, bw=100 * fattree.GBPS)
+    # shrink the budget to its 1024-entry floor so the sweep overflows
+    topo.CAND_CACHE_BYTES = 1
+    cap = topo._cand_cache_cap()
+    assert cap == 1024
+    demand = set()
+    for src in topo.hosts:
+        for dst in topo.hosts[::3]:
+            if src != dst:
+                topo.path_links(src, dst, 0)
+                demand.add((src, dst))
+                assert len(topo._cand) <= cap
+    # the sweep genuinely overflowed the cap (else the test is vacuous)
+    assert len(demand) > cap
+    assert len(topo._cand) == cap
+    # routing answers are unaffected by eviction
+    default_cap = fattree.Topology.CAND_CACHE_BYTES // \
+        fattree.Topology._CAND_ENTRY_BYTES
+    assert default_cap >= cap
+    assert topo.path_links(topo.hosts[0], topo.hosts[-1], 0)
+
+
+# ============================================================== telemetry
+
+def test_staging_stats_shape():
+    topo = small_fat_tree()
+    eng = FlowEngine(topo)
+    wl = Workload("w")
+    wl.bcast(topo.hosts[:4], 1 << 20)
+    eng.run_workloads([wl])
+    stats = eng.staging_stats()
+    for k in ("hits", "misses", "hit_rate", "invalidations", "paths",
+              "trees", "lat", "ops"):
+        assert k in stats
+    assert 0.0 <= stats["hit_rate"] <= 1.0

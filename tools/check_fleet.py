@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Fleet-scale sweep-plane smoke gate (wired into CI).
+
+Four invariants from ISSUE 9:
+
+1. **SLO parity** — the multi-tenant contended scenario completes on
+   BOTH engines with per-tenant worst-tail (p99 JCT) divergence <= 10%
+   for every tenant phase;
+2. **monotone tails** — every phase reports p50 <= p99 <= p999 <= max;
+3. **census cross-check** — the flow engine's ANALYTIC connection
+   census equals the packet engine's MEASURED per-host QP counts
+   exactly, and agrees on aggregate MFT group occupancy;
+4. **staged-artifact reuse** — the flow sweep reports a staging-cache
+   hit rate > 0 (the cached staging plane is live, not bypassed).
+
+Exit code 0 = clean; 1 = divergence (details on stderr).
+
+    PYTHONPATH=src python tools/check_fleet.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.apps.fleet import FleetSpec, run_fleet   # noqa: E402
+from repro.core import fattree                      # noqa: E402
+
+TOL = 0.10
+SPEC = FleetSpec(n_tenants=4, groups_per_tenant=2, group_size=6,
+                 nbytes=2 << 20, bg_unicasts=8, bg_incasts=2,
+                 bg_fan_in=4, bg_nbytes=1 << 20, seed=0)
+
+
+def fabric():
+    return fattree.fat_tree(n_pods=2, leaves_per_pod=4, hosts_per_leaf=4,
+                            aggs_per_pod=4, bw=100 * fattree.GBPS)
+
+
+def main() -> int:
+    problems: list = []
+    rp = run_fleet("packet", fabric(), SPEC, seed=1)
+    rf = run_fleet("flow", fabric(), SPEC)
+    for rep in (rp, rf):
+        if rep["errors"]:
+            problems.append(f"{rep['engine']}: {rep['errors']} errored ops")
+
+    for phase, qf in sorted(rf["tenants"].items()):
+        qp_ = rp["tenants"][phase]
+        a, b = qf["p99"], qp_["p99"]
+        div = abs(a - b) / max(a, b)
+        print(f"check_fleet: {phase:10s} p99 packet={b * 1e3:8.4f}ms "
+              f"flow={a * 1e3:8.4f}ms div={100 * div:.1f}%")
+        if phase.startswith("tenant-") and div > TOL:
+            problems.append(f"{phase}: packet-vs-flow p99 divergence "
+                            f"{100 * div:.1f}% > {100 * TOL:.0f}%")
+        for q in (qf, qp_):
+            if not q["p50"] <= q["p99"] <= q["p999"] <= q["latency"]:
+                problems.append(f"{phase}: non-monotone quantiles {q}")
+
+    cp, cf = rp["census"], rf["census"]
+    print(f"check_fleet: census qp_total={cp['qp_total']} "
+          f"nic_qp_peak={cp['nic_qp_peak']} "
+          f"mft_groups={cp['mft_groups_total']} "
+          f"mft_bytes packet={cp['mft_bytes_total']} "
+          f"flow={cf['mft_bytes_total']}")
+    if cf["qp_per_host"] != cp["qp_per_host"]:
+        diff = {h: (cf["qp_per_host"].get(h), cp["qp_per_host"].get(h))
+                for h in set(cf["qp_per_host"]) | set(cp["qp_per_host"])
+                if cf["qp_per_host"].get(h) != cp["qp_per_host"].get(h)}
+        problems.append(f"census: analytic vs measured QP mismatch {diff}")
+    if cf["mft_groups_total"] != cp["mft_groups_total"]:
+        problems.append(
+            f"census: MFT group occupancy {cf['mft_groups_total']} "
+            f"(flow) != {cp['mft_groups_total']} (packet)")
+
+    hit_rate = rf["staging"]["hit_rate"]
+    print(f"check_fleet: staging hit_rate={hit_rate:.2f} "
+          f"hits={rf['staging']['hits']} misses={rf['staging']['misses']}")
+    if not hit_rate > 0:
+        problems.append("staging cache saw zero hits during the sweep")
+
+    if problems:
+        for p in problems:
+            print(f"check_fleet: {p}", file=sys.stderr)
+        return 1
+    print("check_fleet: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
