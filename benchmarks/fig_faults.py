@@ -20,6 +20,11 @@ with timed faults riding the op (Workload-IR ``FaultEvent``s):
   teardown confirm, no master round trip), ``fail_detect``-bounded for
   a master crash (member-driven re-election).
 
+Two correlated multi-fault rows ride each group size (``storm_cases``):
+a plane-wide link storm and a whole-rack blast — several
+``FaultEvent``s in ONE scenario, stressing concurrent repair instead
+of the one-fault-at-a-time recovery axis.
+
 Every point runs on the packet engine (real repair envelopes, bounded
 retry, re-election) AND the flow engine (piecewise stall/dark
 segments); the derived column carries the packet-vs-flow divergence —
@@ -100,6 +105,41 @@ def recovery_cases(members):
     ]
 
 
+def storm_cases(members):
+    """Correlated multi-``FaultEvent`` scenarios (blast radius > 1).
+
+    - ``storm``: a correlated link storm — plane 0 drops across EVERY
+      member rack within a microsecond, so the repair fan-out to
+      plane 1 runs for all branches concurrently instead of one at a
+      time (the fault plan is validated cumulatively: plane 1 keeps
+      every member routable throughout);
+    - ``rack-blast``: the last member's whole rack dies in one blast —
+      every non-source member on that leaf goes dark back-to-back
+      while the leaf's plane-0 uplink drops, exercising teardown
+      cascades racing a link repair on the same branch.
+    """
+    leaves = []
+    for m in members[1:]:                       # skip the source's leaf
+        leaf = f"L{m[1]}.{m[3]}"
+        if leaf not in leaves:
+            leaves.append(leaf)
+    storm = tuple(FaultEvent("link_down", FAULT_AT + i * 1e-7, node=lf,
+                             peer=f"A{lf[1]}.0")
+                  for i, lf in enumerate(leaves))
+    last = members[-1]
+    rack_leaf = f"L{last[1]}.{last[3]}"
+    rack = [m for m in members[1:] if f"L{m[1]}.{m[3]}" == rack_leaf]
+    # the servers die first, then the ToR uplink drops — by the time
+    # the link fault lands no live receiver sits behind it, so neither
+    # engine should charge a repair stall to the survivors
+    blast = tuple(FaultEvent("host_gone_dark", FAULT_AT + i * 1e-7,
+                             node=m)
+                  for i, m in enumerate(rack))
+    blast += (FaultEvent("link_down", FAULT_AT + len(rack) * 1e-7,
+                         node=rack_leaf, peer=f"A{last[1]}.0"),)
+    return [("storm", storm), ("rack-blast", blast)]
+
+
 def _points(group):
     members = members_for(group)
     pts = [(f"r{rate:g}", GroupOp("bcast", members, NBYTES,
@@ -107,6 +147,8 @@ def _points(group):
            for rate in FAULT_RATES]
     pts += [(label, GroupOp("bcast", members, NBYTES, faults=faults))
             for label, faults in recovery_cases(members)]
+    pts += [(label, GroupOp("bcast", members, NBYTES, faults=faults))
+            for label, faults in storm_cases(members)]
     # overlay relay repair: a mid-ring relay goes dark
     pts.append(("ring-dark", GroupOp(
         "bcast", members, NBYTES, transport="ring",
@@ -154,6 +196,15 @@ def run(rows, engine="packet", sizes=SIZES):
             rows.append((f"figfaults/recovery_g{group}_{label}/packet_us",
                          rp * 1e6,
                          f"flow={rf * 1e6:.2f}us div={100 * div:.1f}%"))
+        # correlated storms: several faults riding ONE scenario
+        for label, faults in storm_cases(members_for(group)):
+            rp = jct_p[label][0] - jct_p["r0"][0]
+            rf = jct_f[label][0] - jct_f["r0"][0]
+            div = abs(jct_p[label][0] - jct_f[label][0]) / jct_p[label][0]
+            rows.append((f"figfaults/recovery_g{group}_{label}/packet_us",
+                         rp * 1e6,
+                         f"flow={rf * 1e6:.2f}us div={100 * div:.1f}% "
+                         f"({len(faults)} correlated faults)"))
         # overlay: dead mid-ring relay, children respliced
         rp = jct_p["ring-dark"][0] - jct_p["ring-r0"][0]
         rf = jct_f["ring-dark"][0] - jct_f["ring-r0"][0]

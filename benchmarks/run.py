@@ -54,6 +54,7 @@ MODULES = [
     "fig15_16_loss",         # Figs. 15-16 loss tolerance / goodput
     "fig_churn",             # membership churn: JCT + recovery time
     "fig_faults",            # fault injection: recovery latency + JCT
+    "fig_matrix",            # churn x loss x faults grid at fig14 scale
     "fig_apps",              # app plane: train-step time + serve QPS/p99
     "fig_fleet",             # fleet plane: multi-tenant SLOs + census
     "collective_schedules",  # adapted layer: ICI schedule comparison

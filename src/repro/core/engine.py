@@ -824,8 +824,22 @@ class FlowEngine(_WorkloadStaging):
                  group_kw: Optional[dict] = None,
                  relay_kw: Optional[dict] = None, loss_rate: float = 0.0,
                  ecn_backlog: float = math.inf, seed: Optional[int] = None,
-                 staging_cache: bool = True, **sim_kw):
+                 staging_cache: bool = True,
+                 segment_solver: Optional[str] = None, **sim_kw):
         self.topo = topo
+        # ``segment_solver`` picks how dynamic ops' per-segment fairness
+        # snapshots are solved: "batched" (default) collects every
+        # segment problem across the run/run_many batch and solves them
+        # in a few bucketed ``segment_rates_many`` calls (device-
+        # resident on the JAX backend); "legacy" keeps the per-segment
+        # ``static_maxmin_loops`` closure — the before-leg of the
+        # ``dyn_segments`` benchmark.  ``REPRO_SEGMENTS`` overrides.
+        segment_solver = segment_solver or \
+            os.environ.get("REPRO_SEGMENTS", "batched")
+        if segment_solver not in ("batched", "legacy"):
+            raise ValueError(f"segment_solver {segment_solver!r}; "
+                             "choose 'batched' or 'legacy'")
+        self.segment_solver = segment_solver
         if sim_kw:
             # remaining packet-engine physics (p4_mode, ...) have no
             # fluid counterpart; refusing beats silently comparing a
@@ -883,11 +897,17 @@ class FlowEngine(_WorkloadStaging):
             self._cfg_key = None
         self._staged: List[tuple] = []           # (links, volume, rec, info)
         self._post: List[Callable[[float], float]] = []   # composite fins
-        # piecewise-membership timelines of dynamic ops, keyed by the
-        # id() of their hidden record: [(t_rel, tree_links), ...] — the
-        # finalizers' fairness snapshots look up what OTHER scenario
-        # flows occupy at a segment boundary (see _stage_dynamic)
+        # piecewise-membership timelines of dynamic ops, keyed by a
+        # monotonic per-engine token (NOT ``id()`` — a GC'd hidden
+        # record's id can be recycled by a later dynamic op mid-sweep,
+        # silently aliasing two timelines): [(t_rel, tree_links), ...].
+        # The finalizers' fairness snapshots look up what OTHER
+        # scenario flows occupy at a segment boundary
+        # (see _stage_dynamic); the token rides in the staged entry.
         self._dyn_links: Dict[int, List[Tuple[float, tuple]]] = {}
+        self._dyn_seq = 0                        # next timeline token
+        self._dyn_meta: Dict[int, tuple] = {}    # token -> (cap0, loss)
+        self._seg_fair: Dict[int, List[float]] = {}   # batched snapshots
         self._fin_staged: Optional[List[tuple]] = None
         self._next_msg = 0
         self.now = 0.0
@@ -1084,8 +1104,11 @@ class FlowEngine(_WorkloadStaging):
 
     def _stage(self, links, volume: float, rec: MsgRecord,
                deliver: Dict[str, float], cqe_extra: float,
-               loss=None) -> MsgRecord:
-        self._staged.append((links, volume, rec, deliver, cqe_extra, loss))
+               loss=None, dyn: Optional[int] = None) -> MsgRecord:
+        """``dyn`` is the ``_dyn_links`` timeline token of a dynamic
+        op's hidden flow (None for static flows)."""
+        self._staged.append((links, volume, rec, deliver, cqe_extra, loss,
+                             dyn))
         return rec
 
     def _new_rec(self, nbytes: int) -> MsgRecord:
@@ -1324,19 +1347,23 @@ class FlowEngine(_WorkloadStaging):
                     default=0.0)
         loss = self._loss_params(links0, nbytes=op.nbytes, rtt=2.0 * back0,
                                  tuning=self.group_kw, op=op)
-        self._stage(links0, volume, hidden, {}, 0.0, loss)
-        self._dyn_links[id(hidden)] = \
+        token = self._dyn_seq
+        self._dyn_seq += 1
+        self._stage(links0, volume, hidden, {}, 0.0, loss, dyn=token)
+        self._dyn_links[token] = \
             [(0.0, links0)] + [(at, ls) for _, at, ls, _ in steps]
+        self._dyn_meta[token] = (cap0, loss)
 
         def other_links_at(t_rel: float) -> List[tuple]:
             """Link sets every OTHER flow of the scenario occupies at
             ``t_rel`` (dynamic ops via their segment timeline)."""
             others = []
             for entry in self._fin_staged or []:
-                o_links, o_rec = entry[0], entry[2]
-                if o_rec is hidden:
+                o_links, o_dyn = entry[0], entry[6]
+                if o_dyn == token:
                     continue
-                timeline = self._dyn_links.get(id(o_rec))
+                timeline = self._dyn_links.get(o_dyn) \
+                    if o_dyn is not None else None
                 if timeline is not None:
                     for at, ls in timeline:
                         if at <= t_rel:
@@ -1349,24 +1376,28 @@ class FlowEngine(_WorkloadStaging):
 
         def fair(links_now, t_rel: float) -> float:
             """Static max-min snapshot of this op's segment tree against
-            the co-scenario flows; mincap for a scenario-lone flow."""
+            the co-scenario flows; mincap for a scenario-lone flow.
+            The legacy per-segment path — ``segment_solver='batched'``
+            precomputes every snapshot through ``_solve_segments``
+            instead and this closure never runs."""
             if not links_now:
                 return cap0
             others = other_links_at(t_rel)
             if not others:
                 return mincap(links_now)
-            from repro.core.flowsim import static_maxmin
-            rates = static_maxmin(sim.cap, others + [links_now])
+            from repro.core.flowsim import static_maxmin_loops
+            rates = static_maxmin_loops(sim.cap, others + [links_now])
             return float(rates[-1])
 
         def fin(t0: float) -> float:
             r0 = volume / (hidden.t_sender_cqe - t0)
-            fair0 = fair(links0, 0.0)
+            fairs = self._seg_fair.get(token)
+            fair0 = fairs[0] if fairs is not None else fair(links0, 0.0)
             remaining, t_rel, fair_now = volume, 0.0, fair0
             cqe_floor = 0.0                 # fault recovery lower bound
             lat_now, src_now = latency, source
-            for kind, at, links_next, extra in \
-                    steps + [("cap", math.inf, links0, None)]:
+            for idx, (kind, at, links_next, extra) in enumerate(
+                    steps + [("cap", math.inf, links0, None)]):
                 rate = r0 * (fair_now / fair0)
                 if at > t_rel:
                     if remaining <= rate * (at - t_rel):
@@ -1400,7 +1431,12 @@ class FlowEngine(_WorkloadStaging):
                     cqe_floor = max(cqe_floor, extra["resume"])
                 if extra is not None:
                     lat_now, src_now = extra["lat"], extra["src"]
-                fair_now = fair(links_next, at)
+                if fairs is None:
+                    fair_now = fair(links_next, at)
+                elif idx + 1 < len(fairs):
+                    # the sentinel step's snapshot is never consumed —
+                    # the batched solver doesn't compute it
+                    fair_now = fairs[idx + 1]
             done = t0 + t_rel
             if op.faults:
                 # replay the merged timeline up to completion; members
@@ -1752,7 +1788,7 @@ class FlowEngine(_WorkloadStaging):
                     self._next_msg += 1
                     cache.hits += 1
                     staged.append((links, volume, rec, deliver, extra,
-                                   loss))
+                                   loss, None))
                     recs.append(rec)
             return fn
 
@@ -1761,13 +1797,103 @@ class FlowEngine(_WorkloadStaging):
                       workers=workers)
         return out
 
+    # ------------------------------------------------- dynamic segments
+
+    def _solve_segments(self, scenarios: Sequence[List[tuple]]) -> None:
+        """Batch-solve every dynamic op's per-segment fairness snapshot.
+
+        The batched replacement for the per-segment ``fair()`` closure
+        of ``_stage_dynamic``: walk each scenario's event timelines
+        (MemberEvents + FaultEvents, already merged into ``_dyn_links``
+        entries at staging time), build one max-min problem per segment
+        — the segment's tree against every other co-scenario flow at
+        that instant, the own flow LAST exactly as the closure orders
+        it — and solve all of them in a few bucketed
+        ``segment_rates_many`` calls (device-resident on the JAX
+        backend, vectorized numpy otherwise).  Results land in
+        ``_seg_fair[token]``; the finalizers consume them instead of
+        re-solving.
+
+        Exactness rules (the ``check_faults`` frozen refs depend on
+        them): an empty segment tree snapshots at ``cap0`` and a
+        scenario-lone op at ``min(cap[links])`` — both computed with
+        the closure's exact scalar expressions, no solver involved.
+        Adjacent segments usually differ by one event, so their
+        problems often coincide for other ops' snapshots — the dedup
+        map IS the warm start (each distinct problem is solved once per
+        batch), and solved values persist in the staging cache
+        (``misc['segrates']``) so sweep re-passes skip the solve
+        entirely.
+        """
+        if self.segment_solver != "batched":
+            return
+        sim = self._sim
+        cap = sim.cap
+        probs: List[tuple] = []          # unique (link_sets, loss)
+        keys: Dict[tuple, int] = {}      # problem key -> probs index
+        fills: List[tuple] = []          # (fairs, seg_idx, probs_idx, key)
+        memo = sim.cache.sync().misc.setdefault("segrates", {})
+        for staged in scenarios:
+            tokens = [e[6] for e in staged if e[6] is not None]
+            for token in tokens:
+                timeline = self._dyn_links[token]
+                cap0, lp = self._dyn_meta[token]
+                fairs = [0.0] * len(timeline)
+                self._seg_fair[token] = fairs
+                for k, (t_k, links_k) in enumerate(timeline):
+                    if not links_k:     # no receivers left
+                        fairs[k] = cap0
+                        continue
+                    others = []
+                    for entry in staged:
+                        o_links, o_dyn = entry[0], entry[6]
+                        if o_dyn == token:
+                            continue
+                        tl = self._dyn_links.get(o_dyn) \
+                            if o_dyn is not None else None
+                        if tl is not None:
+                            for at, ls in tl:
+                                if at <= t_k:
+                                    o_links = ls
+                                else:
+                                    break
+                        if o_links:
+                            others.append(o_links)
+                    if not others:      # scenario-lone: exact mincap
+                        fairs[k] = float(min(cap[i] for i in links_k))
+                        continue
+                    sets = tuple(others) + (tuple(links_k),)
+                    key = (sets, lp)
+                    val = memo.get(key)
+                    if val is not None:
+                        fairs[k] = val
+                        continue
+                    pi = keys.get(key)
+                    if pi is None:
+                        pi = keys[key] = len(probs)
+                        probs.append((sets, lp))
+                    fills.append((fairs, k, pi, key))
+        if not probs:
+            return
+        vals = sim.segment_rates_many(probs)
+        bound = len(memo) < staging.MAX_ENTRIES
+        for fairs, k, pi, key in fills:
+            fairs[k] = vals[pi]
+            if bound:
+                memo[key] = vals[pi]
+
+    def _clear_dynamics(self) -> None:
+        self._dyn_links.clear()
+        self._dyn_meta.clear()
+        self._seg_fair.clear()
+
     # ------------------------------------------------------------ drivers
 
     def _backfill(self, staged, flows, t0: float) -> float:
         """Turn solver completion times into record bookkeeping;
         returns the scenario's end time (latest sender CQE)."""
         end = t0
-        for f, (_, _, rec, deliver, back, _) in zip(flows, staged):
+        for f, (_, _, rec, deliver, back, _, _) in zip(flows, staged):
             done = t0 + f.done_t
             if deliver:
                 td = rec.t_deliver
@@ -1794,13 +1920,14 @@ class FlowEngine(_WorkloadStaging):
         sim = self._sim                          # reuse routing + caps
         sim.flows, sim.now = [], 0.0             # fresh batch, epoch-local t
         flows = sim.add_many((links, volume, loss)
-                             for links, volume, _, _, _, loss
+                             for links, volume, _, _, _, loss, _
                              in self._staged)
         sim.run()
+        self._solve_segments([self._staged])
         self.now = max(self.now, self._finalize(self._staged, self._post,
                                                 flows, self.now))
         self._staged, self._post = [], []
-        self._dyn_links.clear()
+        self._clear_dynamics()
         return self.now
 
     def run_many(self, scenarios: Sequence[Callable], timeout: float = 30.0,
@@ -1825,7 +1952,7 @@ class FlowEngine(_WorkloadStaging):
             self._staged, self._post = [], []
         sim.flows, sim.now = [], 0.0
         epoch_flows = [sim.add_many((links, volume, loss)
-                                    for links, volume, _, _, _, loss
+                                    for links, volume, _, _, _, loss, _
                                     in staged)
                        for staged, _ in metas]
         if hasattr(sim, "solve_many"):           # vmapped batch (JAX)
@@ -1834,10 +1961,11 @@ class FlowEngine(_WorkloadStaging):
             for flows in epoch_flows:
                 sim.flows, sim.now = flows, 0.0
                 sim.run()
+        self._solve_segments([staged for staged, _ in metas])
         ends = [self._finalize(staged, post, flows, t0)
                 for (staged, post), flows in zip(metas, epoch_flows)]
         self.now = max([self.now] + ends)
-        self._dyn_links.clear()
+        self._clear_dynamics()
         return ends
 
 

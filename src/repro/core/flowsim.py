@@ -230,6 +230,30 @@ class LinkMap:
             cache.lat[req] = (float(p + s), float(p))
         cache.bound()
 
+    def segment_rates_many(self, problems) -> List[float]:
+        """Solve a batch of dynamic-segment fairness snapshots.
+
+        Each problem is ``(link_sets, loss)``: a tuple of link-id
+        tuples (the OWN flow last, exactly the layout
+        ``engine._stage_dynamic``'s per-segment ``fair()`` closure
+        passes to ``static_maxmin``) plus the own flow's ``LossParams``
+        (or None).  Returns the own flow's solved rate per problem,
+        loss-factor-adjusted when loss params are given.
+
+        This numpy fallback is the ORACLE the JAX override
+        (``flowsim_jax.JaxFlowSim.segment_rates_many``) is tested
+        against (<= 1e-6 relative) — per-problem it is bit-identical
+        to the legacy per-segment path.
+        """
+        out = []
+        for link_sets, lp in problems:
+            rates = static_maxmin(self.cap, link_sets)
+            r = float(rates[-1])
+            if lp is not None:
+                r *= segment_loss_factor(self.cap, link_sets, rates, lp)
+            out.append(r)
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class LossParams:
@@ -299,14 +323,13 @@ class Flow:
             self.remaining = self.volume
 
 
-def static_maxmin(cap: np.ndarray, link_sets: Sequence[Sequence[int]]):
-    """Max-min fair rates for a static flow set by progressive filling.
+def static_maxmin_loops(cap: np.ndarray,
+                        link_sets: Sequence[Sequence[int]]):
+    """Per-flow-loop progressive filling — the original implementation.
 
-    ``cap`` is the dense capacity vector (bytes/s, NOT mutated);
-    ``link_sets`` one link-id sequence per flow.  Returns (F,) rates.
-    Shared by the solver hot path (``FlowSim._allocate``) and the
-    engine's piecewise-membership fairness snapshots
-    (``engine.FlowEngine._stage_dynamic``).
+    Kept verbatim as the bit-identity oracle for the vectorized
+    ``static_maxmin`` (the regression tests assert exact equality) and
+    as the honest "before" leg of the ``dyn_segments`` benchmark.
     """
     flow_links = [np.asarray(ls, int) for ls in link_sets]
     n = len(flow_links)
@@ -339,6 +362,90 @@ def static_maxmin(cap: np.ndarray, link_sets: Sequence[Sequence[int]]):
         if frozen.all():
             break
     return np.maximum(rates, 1e-9)
+
+
+def static_maxmin(cap: np.ndarray, link_sets: Sequence[Sequence[int]]):
+    """Max-min fair rates for a static flow set by progressive filling.
+
+    ``cap`` is the dense capacity vector (bytes/s, NOT mutated);
+    ``link_sets`` one link-id sequence per flow (link ids unique within
+    a flow — trees and simple paths never repeat a link).  Returns (F,)
+    rates.  Shared by the solver hot path (``FlowSim._allocate``) and
+    the engine's piecewise-membership fairness snapshots
+    (``engine.FlowEngine._stage_dynamic``).
+
+    CSR-vectorized: one ``np.add.at`` scatter for per-link demand and
+    one ``np.minimum.reduceat`` gather for per-flow limits replace the
+    per-flow Python loop of ``static_maxmin_loops``; the element-wise
+    operation sequences are identical (ordered scatters, exact min
+    reductions), so the results are bit-identical.
+    """
+    n = len(link_sets)
+    if n == 0:
+        return np.maximum(np.zeros(0), 1e-9)
+    lens = np.fromiter((len(ls) for ls in link_sets), np.int64, n)
+    if not lens.all():           # empty set: no constraint — rare, and
+        return static_maxmin_loops(cap, link_sets)    # not vectorizable
+    total = int(lens.sum())
+    flat = np.fromiter((i for ls in link_sets for i in ls), np.int64,
+                       total)
+    starts = np.cumsum(lens) - lens
+    row = np.repeat(np.arange(n), lens)
+    rates = np.zeros(n)
+    frozen = np.zeros(n, bool)
+    cap = np.asarray(cap, float).copy()
+    live = np.ones(total, bool)             # per-entry ~frozen[row]
+    for _ in range(64):                     # bottleneck rounds
+        cnt = np.zeros(len(cap))
+        np.add.at(cnt, flat[live], 1.0)
+        hot = cnt > 0
+        if not hot.any():
+            break
+        share = np.full(len(cap), INF)
+        share[hot] = cap[hot] / cnt[hot]
+        # each unfrozen flow is limited by its tightest link
+        limit = np.minimum.reduceat(share[flat], starts)
+        limit[frozen] = INF
+        b = limit.min()
+        # freeze flows crossing a bottleneck link (share == b)
+        newly = (~frozen) & (limit <= b * (1 + 1e-12))
+        if not newly.any():
+            break
+        rates[newly] = b
+        # unbuffered ordered scatter == the loop's sequential per-flow
+        # ``cap[links] -= b`` (row-major order, one op per element)
+        np.subtract.at(cap, flat[newly[row]], b)
+        frozen |= newly
+        live = ~frozen[row]
+        cap = np.maximum(cap, 0.0)
+        if frozen.all():
+            break
+    return np.maximum(rates, 1e-9)
+
+
+def segment_loss_factor(cap: np.ndarray, link_sets, rates, lp) -> float:
+    """Expected-value loss/DCQCN rate factor for the LAST flow of a
+    solved segment problem — the scalar numpy twin of
+    ``kernels/ref.py:loss_factors_reference`` (same math as
+    ``FlowSim._apply_loss``, evaluated for one flow against the whole
+    segment's solved rates).  Used by the batched dynamic-segment
+    solver so churn-under-loss fairness snapshots are loss-native."""
+    util = np.zeros(len(cap))
+    cnt = np.zeros(len(cap))
+    for ls, r in zip(link_sets, rates):
+        ids = np.asarray(ls, int)
+        util[ids] += r
+        cnt[ids] += 1.0
+    hot = (cnt >= 2.0) & (util >= cap * (1.0 - ECN_UTIL_EPS))
+    r = float(rates[-1])
+    w = min(math.sqrt(max(r * lp.wsq, 0.0)), lp.wnd)
+    gbn = (1.0 - lp.q) / max(1.0 - lp.q + lp.q * w, 1e-30)
+    dc = 1.0
+    if lp.ecn and hot[np.asarray(link_sets[-1], int)].any():
+        alpha = min(DCQCN_RATE_NUM / max(r, 1e-30), 1.0)
+        dc = max(1.0 - 0.25 * alpha,
+                 min(DCQCN_MIN_RATE / max(r, 1e-30), 1.0))
+    return min(max(gbn * dc, 1e-9), 1.0)
 
 
 class FlowSim(LinkMap):

@@ -85,6 +85,13 @@ MAX_PAD_WASTE = 4.0
 SOLVE_STATS = {"solve_s": 0.0, "calls": 0, "shapes": []}
 _STATS_LOCK = threading.Lock()
 
+#: dynamic-segment solves mirror the numpy ``flowsim.static_maxmin``
+#: filling: float64, the same relative freeze slack, the same 64-round
+#: cap — so the batched fairness snapshots match the per-segment
+#: oracle to <= 1e-6 (reduction-order rounding only)
+SEG_TOL = 1e-12
+SEG_ROUNDS = 64
+
 
 def reset_solve_stats():
     SOLVE_STATS.update(solve_s=0.0, calls=0, shapes=[])
@@ -214,6 +221,32 @@ if HAS_JAX:
         # calls must land on the same memoized jit object (the
         # cache-hit tests introspect it via the two-arg form)
         return _solver_impl(bool(batched), mode, bool(lossy))
+
+    @functools.lru_cache(maxsize=None)
+    def _seg_solver(mode: str):
+        """Jitted, vmapped dynamic-segment solver, one per kernel mode.
+
+        One lane = one fairness-snapshot problem: a padded (F, H)
+        link-id matrix, its active-row mask, and the index of the OWN
+        flow.  The lane solves max-min rates under the numpy-matched
+        ``SEG_TOL``/``SEG_ROUNDS`` regime, applies the fused loss/DCQCN
+        factors (all-zero loss rows give factor exactly 1.0, so one
+        always-lossy executable covers lossless problems bit-exactly),
+        and returns the own flow's corrected rate.
+        """
+        from repro.core.flowsim import DCQCN_MIN_RATE, DCQCN_RATE_NUM
+        from repro.kernels.maxmin import loss_factors, maxmin_rates
+
+        def one(fl, active, own, cap, loss):
+            rates = maxmin_rates(fl, cap, active, mode=mode, tol=SEG_TOL,
+                                 max_rounds=SEG_ROUNDS)
+            fac = loss_factors(fl, rates, active, cap, *loss,
+                               dcqcn_num=DCQCN_RATE_NUM,
+                               dcqcn_min=DCQCN_MIN_RATE, mode=mode)
+            return rates[own] * fac[own]
+
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None,
+                                              (0, 0, 0, 0))))
 
     @functools.lru_cache(maxsize=None)
     def _solver_impl(batched: bool, mode: str, lossy: bool):
@@ -456,4 +489,74 @@ class JaxFlowSim(LinkMap):
             for row, i in enumerate(batch):
                 out[i] = self._finish(epochs[i], done[row])
         self.now = max([self.now] + out)
+        return out
+
+    # --------------------------------------------- dynamic-segment solve
+
+    def segment_rates_many(self, problems) -> List[float]:
+        """Batched device override of ``LinkMap.segment_rates_many``.
+
+        Same contract as the numpy fallback (one ``(link_sets, loss)``
+        problem per dynamic segment, OWN flow last; returns the own
+        flow's loss-corrected rate), but every problem becomes one vmap
+        lane: problems are bucketed by padded (F, H) shape through the
+        same ``_plan_batches`` planner as the epoch solver and solved
+        in one jitted call per batch, in float64 under the
+        ``SEG_TOL``/``SEG_ROUNDS`` regime that mirrors the numpy
+        oracle's filling (matches it to <= 1e-6 relative — only
+        reduction-order rounding differs).
+        """
+        out = [0.0] * len(problems)
+        if not problems:
+            return out
+        from repro.kernels.maxmin import _resolve_mode
+        dtype = np.float64
+        self.solve_dtype = dtype
+        cap = self._cap_ext(dtype)
+        sentinel = len(self.cap)
+        shapes = {}
+        for i, (sets, _) in enumerate(problems):
+            f, h = len(sets), max(len(ls) for ls in sets)
+            shapes[i] = (_bucket(f, self.F_BUCKET_MIN),
+                         _bucket(h, self.H_BUCKET_MIN)) \
+                if self.bucketing else (f, h)
+        batches = self._plan_batches(problems, list(range(len(problems))),
+                                     shapes)
+        solve = _seg_solver(_resolve_mode())
+        for batch in batches:
+            f_pad = max(shapes[i][0] for i in batch)
+            h_pad = max(shapes[i][1] for i in batch)
+            nb = len(batch)
+            fl = np.full((nb, f_pad, h_pad), sentinel, np.int32)
+            act = np.zeros((nb, f_pad), dtype)
+            own = np.zeros(nb, np.int32)
+            lrows = np.zeros((nb, 4, f_pad), dtype)
+            for r, i in enumerate(batch):
+                sets, lp = problems[i]
+                n = len(sets)
+                lens = np.fromiter((len(ls) for ls in sets), np.int64, n)
+                total = int(lens.sum())
+                flat = np.fromiter((l for ls in sets for l in ls),
+                                   np.int32, total)
+                rows = np.repeat(np.arange(n), lens)
+                cols = np.arange(total) - np.repeat(
+                    np.cumsum(lens) - lens, lens)
+                fl[r, rows, cols] = flat
+                act[r, :n] = 1.0
+                own[r] = n - 1
+                if lp is not None:
+                    lrows[r, :, n - 1] = (lp.q, lp.wsq, lp.wnd,
+                                          1.0 if lp.ecn else 0.0)
+            t0 = time.perf_counter()
+            with enable_x64():
+                vals = np.asarray(solve(
+                    jnp.asarray(fl), jnp.asarray(act), jnp.asarray(own),
+                    jnp.asarray(cap),
+                    tuple(jnp.asarray(lrows[:, k]) for k in range(4))))
+            with _STATS_LOCK:
+                SOLVE_STATS["solve_s"] += time.perf_counter() - t0
+                SOLVE_STATS["calls"] += 1
+                SOLVE_STATS["shapes"].append(tuple(fl.shape))
+            for r, i in enumerate(batch):
+                out[i] = float(vals[r])
         return out

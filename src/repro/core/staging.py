@@ -28,7 +28,12 @@ plane"):
   faults re-derive every time (their staging mutates the down-set
   mid-op, and their artifacts are timeline-dependent).
 - ``misc``   : small derived singletons (the LinkMap link-id/capacity
-  arrays) keyed by an arbitrary string; same invalidation rules.
+  arrays) keyed by an arbitrary string; same invalidation rules.  The
+  batched dynamic-segment solver parks its solved-rate memo here
+  (``misc['segrates']``: (link-set tuple, loss params) -> fair rate),
+  so a sweep's second pass over the same churn/fault timelines skips
+  the segment solves entirely — and a fingerprint move (real topology
+  mutation) drops the memo with everything else.
 
 Entries are plain derived values; nothing downstream mutates them
 (``FlowEngine._backfill`` reads deliver maps read-only), which is what

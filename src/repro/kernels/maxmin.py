@@ -68,7 +68,8 @@ def _resolve_mode(mode=None) -> str:
 
 def _round_kernel(links_ref, frozen_ref, rates_ref, cap_ref,
                   rates_out, frozen_out, cap_out,
-                  cnt_s, share_s, used_s, tight_s, b_s):
+                  cnt_s, share_s, used_s, tight_s, b_s, *,
+                  tol: float = 1e-6):
     """Grid (3, n_tiles): phase-major sequential passes over flow tiles.
 
     Phase 0 accumulates per-link demand; phase 1 turns it into fair
@@ -115,7 +116,7 @@ def _round_kernel(links_ref, frozen_ref, rates_ref, cap_ref,
         frozen = frozen_ref[...]
         tight = tight_s[pl.ds(i * tf, tf)]
         limit = jnp.where(frozen > 0.5, jnp.asarray(jnp.inf, dtype), tight)
-        newly = (frozen < 0.5) & (limit <= b * (1.0 + 1e-6))
+        newly = (frozen < 0.5) & (limit <= b * (1.0 + tol))
         newf = newly.astype(dtype)
         rates_out[...] = jnp.where(newly, b, rates_ref[...])
         frozen_out[...] = jnp.minimum(frozen + newf, 1.0)
@@ -128,11 +129,13 @@ def _round_kernel(links_ref, frozen_ref, rates_ref, cap_ref,
 
 
 def maxmin_round_pallas(flow_links, frozen, rates, cap_rem, *,
-                        block_f: int = 256, interpret: bool = False):
+                        block_f: int = 256, interpret: bool = False,
+                        tol: float = 1e-6):
     """One fused progressive-filling round (see module docstring).
 
     Pads F up to a multiple of ``block_f`` with pre-frozen sentinel
-    rows and slices back, so any F is accepted.
+    rows and slices back, so any F is accepted.  ``tol`` is the
+    compile-time freeze slack (see ``maxmin_round_reference``).
     """
     if not HAS_PALLAS:                          # pragma: no cover - gated
         raise RuntimeError("pallas is not importable; use mode='ref'")
@@ -155,7 +158,7 @@ def maxmin_round_pallas(flow_links, frozen, rates, cap_rem, *,
     cap_spec = lambda: pl.BlockSpec((n_caps,), lambda p, i: (0,))
 
     rates_o, frozen_o, cap_o = pl.pallas_call(
-        _round_kernel,
+        functools.partial(_round_kernel, tol=tol),
         grid=grid,
         in_specs=[tile_spec(), vec_spec(), vec_spec(), cap_spec()],
         out_specs=[vec_spec(), vec_spec(), cap_spec()],
@@ -173,19 +176,21 @@ def maxmin_round_pallas(flow_links, frozen, rates, cap_rem, *,
 
 
 def maxmin_round(flow_links, frozen, rates, cap_rem, *, mode=None,
-                 block_f: int = 256):
+                 block_f: int = 256, tol: float = 1e-6):
     """Mode-dispatched fused round; returns (rates, frozen, cap_rem)."""
     mode = _resolve_mode(mode)
     if mode == "ref":
-        return maxmin_round_reference(flow_links, frozen, rates, cap_rem)
+        return maxmin_round_reference(flow_links, frozen, rates, cap_rem,
+                                      tol=tol)
     return maxmin_round_pallas(flow_links, frozen, rates, cap_rem,
                                block_f=block_f,
-                               interpret=(mode == "interpret"))
+                               interpret=(mode == "interpret"), tol=tol)
 
 
 # ------------------------------------------------------------- the solver
 
-def maxmin_rates(flow_links, cap, active, *, mode=None, block_f: int = 256):
+def maxmin_rates(flow_links, cap, active, *, mode=None, block_f: int = 256,
+                 tol: float = 1e-6, max_rounds=None):
     """Max-min fair rates by progressive filling over the fused round.
 
     flow_links (F, H) int32 padded with the sentinel (last) index of
@@ -193,15 +198,23 @@ def maxmin_rates(flow_links, cap, active, *, mode=None, block_f: int = 256):
     Returns (F,) rates; inactive flows get ~0.  Terminates in at most F
     rounds (>= 1 flow freezes per round; in practice a handful, since
     whole bottleneck groups freeze together).
+
+    ``tol`` is the relative freeze slack of each round and
+    ``max_rounds`` caps the round count (None keeps the default F+1
+    bound).  The dynamic-segment solver passes ``tol=1e-12,
+    max_rounds=64`` under float64 to mirror the numpy
+    ``flowsim.static_maxmin`` filling round for round.
     """
     mode = _resolve_mode(mode)
     n_flows = flow_links.shape[0]
     dtype = cap.dtype
-    step = functools.partial(maxmin_round, mode=mode, block_f=block_f)
+    step = functools.partial(maxmin_round, mode=mode, block_f=block_f,
+                             tol=tol)
+    bound = n_flows if max_rounds is None else max_rounds - 1
 
     def cond(st):
         _, frozen, _, it = st
-        return jnp.logical_and(jnp.min(frozen) < 0.5, it <= n_flows)
+        return jnp.logical_and(jnp.min(frozen) < 0.5, it <= bound)
 
     def body(st):
         rates, frozen, cap_rem, it = st

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def maxmin_round_reference(flow_links, frozen, rates, cap_rem):
+def maxmin_round_reference(flow_links, frozen, rates, cap_rem, *,
+                           tol: float = 1e-6):
     """One progressive-filling round of max-min fair allocation.
 
     The oracle for ``kernels/maxmin.py`` — plain jnp, materializing every
@@ -21,7 +22,10 @@ def maxmin_round_reference(flow_links, frozen, rates, cap_rem):
     flow_links (F, H) int32 link ids padded with the sentinel (last)
     index of ``cap_rem``; frozen (F,) 0/1 mask in cap dtype (padding
     rows enter frozen); rates (F,); cap_rem (L+1,) with cap_rem[-1]=inf.
-    Returns the round's (rates, frozen, cap_rem).
+    ``tol`` is the relative freeze slack (1e-6 suits float32 solves;
+    the float64 dynamic-segment solver passes 1e-12 to mirror the numpy
+    ``flowsim.static_maxmin`` filling).  Returns the round's
+    (rates, frozen, cap_rem).
     """
     n_caps = cap_rem.shape[0]
     dtype = cap_rem.dtype
@@ -34,7 +38,7 @@ def maxmin_round_reference(flow_links, frozen, rates, cap_rem):
     tightest = jnp.min(share[flow_links], axis=1)
     limit = jnp.where(frozen > 0.5, jnp.inf, tightest)
     b = jnp.min(limit)
-    newly = (frozen < 0.5) & (limit <= b * (1.0 + 1e-6))
+    newly = (frozen < 0.5) & (limit <= b * (1.0 + tol))
     newf = newly.astype(dtype)
     rates = jnp.where(newly, b, rates)
     used = jnp.zeros(n_caps, dtype).at[flow_links].add(

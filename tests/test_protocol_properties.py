@@ -259,3 +259,49 @@ def test_bounded_retry_is_terminal_for_any_budget(cap, sever_at):
     a hang, never unbounded retransmission."""
     from _fault_props import run_bounded_retry_case
     run_bounded_retry_case(cap, sever_at, nbytes=1 << 16)
+
+
+# --------- dynamic-segment solver invariants (drivers in
+# _segment_props.py; deterministic twins in test_segments.py)
+
+@settings(max_examples=40, **FAST)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_flows=st.integers(min_value=1, max_value=32),
+       n_links=st.integers(min_value=2, max_value=40))
+def test_vectorized_maxmin_bit_identity(seed, n_flows, n_links):
+    """CSR-vectorized ``static_maxmin`` reproduces the original
+    per-flow-loop progressive filling bit for bit on arbitrary
+    duplicate-free problems."""
+    from _segment_props import run_solver_identity_case
+    run_solver_identity_case(seed, n_flows=n_flows, n_links=n_links)
+
+
+@settings(max_examples=8, **FAST)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_ops=st.integers(min_value=1, max_value=4),
+       scenarios=st.booleans())
+def test_batched_segments_match_per_segment_oracle(seed, n_ops,
+                                                   scenarios):
+    """For ANY random membership-event timeline, the batched
+    dynamic-segment solver reproduces the legacy per-segment
+    ``static_maxmin`` closures bit for bit on the numpy backend
+    (zero-event ops included — n_ops=1 in isolated scenarios also
+    exercises the lone-op mincap short-circuit)."""
+    from _segment_props import run_engine_timeline_case
+    run_engine_timeline_case(seed, n_ops=n_ops, engine="flow-np",
+                             scenarios=scenarios)
+
+
+@settings(max_examples=8, **FAST)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_problems=st.integers(min_value=1, max_value=10),
+       with_loss=st.booleans())
+def test_device_segment_rates_match_numpy_oracle(seed, n_problems,
+                                                 with_loss):
+    """The device (JAX) batched segment solver matches the numpy
+    ``segment_rates_many`` oracle to <= 1e-6 relative, with and
+    without per-segment loss/DCQCN factors."""
+    pytest.importorskip("jax")
+    from _segment_props import run_segment_rates_parity_case
+    run_segment_rates_parity_case(seed, n_problems=n_problems,
+                                  with_loss=with_loss)

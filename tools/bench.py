@@ -17,7 +17,12 @@ topology/routing/jit caches:
   process against the now-warm directory (the steady state every run
   after the first sees).
 
-It also records a **loss-sweep** point (the fig15 flow sweep through
+It also records a **dyn-segments** point (the ISSUE-10 churn-under-
+loss sweep — 64 dynamic ops cut into 320 piecewise segments on a
+1024-host fat-tree — solved by the batched device-resident segment
+solver vs the legacy per-segment ``static_maxmin`` closures, with a
+zero-loss <= 1e-6 JCT-match tripwire between the two modes), a
+**loss-sweep** point (the fig15 flow sweep through
 the loss-aware solver path, so a perf regression in ``loss_factors``
 shows up next to the fig14 numbers), an **apps-sweep** point (the
 fig_apps train-step/serving lowering through the phase-split execution
@@ -306,6 +311,53 @@ def _flow_loss_sweep(smoke: bool) -> dict:
     }
 
 
+def _flow_dyn_segments(smoke: bool, mode: str) -> dict:
+    """The dyn_segments point: a churn-under-loss sweep (ISSUE 10) with
+    the segment solver pinned to ``mode`` — ``legacy`` is the honest
+    "before" leg (per-segment ``static_maxmin_loops`` closures inside
+    the staging path), ``batched`` the device-resident timeline solver.
+
+    Two timed passes per mode: pass 1 is cold (jit compile for the
+    batched mode), pass 2 the sweep steady state (same process; the
+    batched mode additionally replays memoized segment rates from the
+    shared staging cache, exactly what later sweep passes see).  The
+    zero-loss leg reports full-precision JCTs — the parent asserts the
+    two modes agree there, where they solve the SAME per-segment
+    problems."""
+    from benchmarks import fig_matrix
+    from repro.core import fattree
+    from repro.core.engine import make_engine
+
+    if smoke:
+        topo = fattree.fat_tree(n_pods=2, leaves_per_pod=2,
+                                hosts_per_leaf=8, aggs_per_pod=2)
+        n_groups = 2                               # 32 hosts
+    else:
+        topo = fattree.fat_tree(n_pods=8, leaves_per_pod=8,
+                                hosts_per_leaf=16, aggs_per_pod=8)
+        n_groups = 64                              # 1024 hosts
+    ops = fig_matrix.cell_ops(topo.hosts, n_groups, 12, 5e4, 0,
+                              nbytes=1 << 20)
+    out = {"mode": mode, "ops": len(ops)}
+
+    def timed(loss):
+        kw = {"loss_rate": loss} if loss else {}
+        eng = make_engine("flow", topo, segment_solver=mode, **kw)
+        recs = [eng.stage(op) for op in ops]
+        segs = sum(len(tl) for tl in eng._dyn_links.values())
+        t0 = time.perf_counter()
+        eng.run(timeout=120.0)
+        return segs, round(time.perf_counter() - t0, 4), recs
+
+    out["segments"], out["pass1_wall_s"], _ = timed(1e-3)
+    _, out["pass2_wall_s"], _ = timed(1e-3)
+    out["segments_per_s"] = round(
+        out["segments"] / max(out["pass2_wall_s"], 1e-9), 1)
+    _, _, recs0 = timed(0.0)
+    out["jcts0"] = [r.t_sender_cqe for r in recs0]
+    return out
+
+
 # ---------------------------------------------- packet child measurement
 
 def _packet_single(group: int, loss: float) -> dict:
@@ -495,6 +547,24 @@ def _main_flow(args, result: dict) -> None:
         # staging cache (CI-sized in smoke)
         result["fleet_scale"] = _run_child("flow-fleet", cache_env,
                                            spec={"smoke": args.smoke})
+        # dyn-segments point: churn-under-loss piecewise segments,
+        # batched device solver vs the legacy per-segment closures
+        dyn = {mode: _run_child("flow-dyn", cache_env,
+                                spec={"smoke": args.smoke, "mode": mode})
+               for mode in ("legacy", "batched")}
+        dyn["speedup_cold"] = round(dyn["legacy"]["pass1_wall_s"]
+                                    / dyn["batched"]["pass1_wall_s"], 2)
+        dyn["speedup_steady"] = round(dyn["legacy"]["pass2_wall_s"]
+                                      / dyn["batched"]["pass2_wall_s"], 2)
+        # zero-loss JCT-match tripwire: both modes solve the same
+        # per-segment problems there, so they must agree to 1e-6
+        rel = max((abs(a - b) / abs(b) for a, b in
+                   zip(dyn["legacy"]["jcts0"], dyn["batched"]["jcts0"])),
+                  default=0.0)
+        dyn["jct0_max_rel_diff"] = rel
+        assert rel <= 1e-6, \
+            f"dyn_segments modes diverge on zero-loss JCTs: {rel:g}"
+        result["dyn_segments"] = dyn
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
 
@@ -519,6 +589,10 @@ def _main_flow(args, result: dict) -> None:
         apps = result["apps_sweep"]
         assert apps["rows"] and all(v > 0 for _, v in apps["rows"]), \
             "apps sweep produced no positive step times"
+        dyn = result["dyn_segments"]
+        assert dyn["batched"]["segments"] > 0, \
+            "dyn_segments staged no piecewise segments"
+        assert dyn["batched"]["segments"] == dyn["legacy"]["segments"]
         fleet = result["fleet_scale"]
         assert fleet["pass1"]["errors"] == fleet["pass2"]["errors"] == 0
         assert fleet["pass2"]["hit_rate"] > 0, \
@@ -634,8 +708,9 @@ def main(argv=None) -> int:
                          "provenance; a dirty tree makes it a lie)")
     ap.add_argument("--_child", default=None,
                     choices=("batched", "serial", "flow-loss",
-                             "flow-apps", "flow-fleet", "packet-single",
-                             "packet-sweep", "packet-faults"),
+                             "flow-apps", "flow-fleet", "flow-dyn",
+                             "packet-single", "packet-sweep",
+                             "packet-faults"),
                     help=argparse.SUPPRESS)
     ap.add_argument("--_spec", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
@@ -655,6 +730,11 @@ def main(argv=None) -> int:
     if args._child == "flow-fleet":
         print(json.dumps(_flow_fleet_point(
             json.loads(args._spec)["smoke"])))
+        return 0
+    if args._child == "flow-dyn":
+        spec = json.loads(args._spec)
+        print(json.dumps(_flow_dyn_segments(spec["smoke"],
+                                            spec["mode"])))
         return 0
     if args._child:
         return _child_packet(args._child, json.loads(args._spec))
